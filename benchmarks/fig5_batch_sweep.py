@@ -1,0 +1,52 @@
+"""Paper Fig. 5 — throughput vs batch size (saturation curve).
+
+BERT-Base forward on CPU: tokens/s per batch size; derived column gives the
+v5e roofline prediction (batch amortizes weight streaming until the MXU
+saturates — the paper sees saturation at batch 16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.plan import derive_plan
+from repro.models import forward, init_params
+
+L = 256
+
+
+def _v5e_tokens_per_s(cfg, batch: int) -> float:
+    hw = TPU_V5E
+    n = cfg.param_count()
+    flops = 2.0 * n * batch * L
+    t_compute = flops / hw.peak_flops_bf16
+    t_weights = 2.0 * n / hw.hbm_bandwidth  # stream weights once per step
+    return batch * L / max(t_compute, t_weights)
+
+
+def run() -> list[str]:
+    cfg = get_config("bert-base")
+    key = jax.random.PRNGKey(0)
+    out = []
+    for batch in (1, 2, 4, 8, 16):
+        plan = derive_plan(cfg, {"data": 1, "model": 1}, batch=batch, seq_len=L)
+        params = init_params(key, cfg, plan, dtype=jnp.float32)
+        tokens = jax.random.randint(key, (batch, L), 0, cfg.vocab_size)
+        fn = jax.jit(lambda p, t: forward(p, {"tokens": t}, cfg=cfg, plan=plan)[0])
+        us = time_fn(fn, params, tokens, iters=3)
+        tps = batch * L / (us / 1e6)
+        out.append(
+            emit(
+                f"fig5/batch_{batch}",
+                us,
+                f"cpu_tok_s={tps:.0f};v5e_pred_tok_s={_v5e_tokens_per_s(cfg, batch):.2e}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

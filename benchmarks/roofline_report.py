@@ -1,0 +1,110 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+PEAK = 197e12
+
+
+def load(mesh: str) -> list[dict]:
+    out = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+HBM_BW = 819e9
+
+
+def roofline_fraction(r: dict) -> float:
+    """Train/prefill: useful-FLOPs fraction of compute peak.
+    Decode: useful-bytes fraction of HBM bandwidth (decode is bandwidth-
+    bound by construction — weights+cache are read once per token)."""
+    step = max(r["compute_s"], r["memory_floor_s"], r["collective_s"])
+    if step <= 0:
+        return 0.0
+    if r["shape"] in ("decode_32k", "long_500k"):
+        useful_bytes = r.get("memory_floor_bytes")
+        if useful_bytes is None:
+            useful_bytes = r["memory_floor_s"] * HBM_BW
+        return (useful_bytes / step) / HBM_BW
+    useful = r["model_flops"] / r["n_chips"]
+    return useful / step / PEAK
+
+
+def table(mesh: str) -> str:
+    rows = []
+    head = (
+        "| arch | shape | status | compute | mem(HLO) | mem(floor) | coll(ring) "
+        "| bottleneck | MODEL/HLO flops | roofline frac | fits HBM |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|"
+    )
+    rows.append(head)
+    for r in load(mesh):
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | skip | - | - | - | - | - | - | - |"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | - | - | - | - |"
+            )
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['memory_floor_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['bottleneck']} "
+            f"| {r['model_flops_ratio']:.3f} | {roofline_fraction(r):.3f} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+def summary(mesh: str) -> dict:
+    rs = [r for r in load(mesh) if r.get("status") == "ok"]
+    bn = {}
+    for r in rs:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    fracs = sorted(
+        ((roofline_fraction(r), r["arch"], r["shape"]) for r in rs)
+    )
+    return {
+        "cells_ok": len(rs),
+        "bottlenecks": bn,
+        "worst": fracs[:5],
+        "best": fracs[-5:],
+        "all_fit_hbm": all(r["fits_hbm"] for r in rs),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    a = ap.parse_args()
+    print(table(a.mesh))
+    print()
+    print(json.dumps(summary(a.mesh), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig5_batch_sweep,
+        table2_parallel_modes,
+        table5_utilization,
+        table6_stage_perf,
+        table7_comparison,
+    )
+
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (
+        table2_parallel_modes,
+        table5_utilization,
+        table6_stage_perf,
+        table7_comparison,
+        fig5_batch_sweep,
+    ):
+        try:
+            mod.run()
+        except Exception:
+            ok = False
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

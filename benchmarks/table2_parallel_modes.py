@@ -1,0 +1,126 @@
+"""Paper Table II — the customization-attribute ablation.
+
+Five labs over the ViT-Base MHA stage (Embed 768, 12 heads, L=197->256):
+  Lab 1  per-head QKV MMs, unfused attention, 1 head at a time   (baseline)
+  Lab 2  per-head QKV, blocked/fused attention ("pipeline parallel")
+  Lab 3  Independent-Linear (fused QKV), unfused attention, 4-way head batch
+  Lab 4  per-head QKV, blocked attention, 4-way head batch
+  Lab 5  Independent-Linear + blocked attention + head batch  (CAT choice)
+
+On CPU the wall-clock ratios are schedule-level analogs (no PL pipelining);
+the derived column reports the v5e roofline prediction for each lab from the
+CAT cost model (tile occupancy x HBM-roundtrip terms).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.hardware import TPU_V5E
+from repro.core.pu import pick_pu
+from repro.kernels.mm_pu.ops import pad_overhead
+
+B, L, D, H = 4, 256, 768, 12
+DH = D // H
+
+
+def _mk(key):
+    x = jax.random.normal(key, (B, L, D), jnp.float32)
+    wq = jax.random.normal(jax.random.fold_in(key, 1), (H, D, DH), jnp.float32) * 0.04
+    wk = jax.random.normal(jax.random.fold_in(key, 2), (H, D, DH), jnp.float32) * 0.04
+    wv = jax.random.normal(jax.random.fold_in(key, 3), (H, D, DH), jnp.float32) * 0.04
+    return x, wq, wk, wv
+
+
+def _attn_unfused(q, k, v):
+    s = jnp.einsum("blhd,bmhd->bhlm", q, k) / DH**0.5
+    p = jax.nn.softmax(s, axis=-1)  # scores round-trip "HBM"
+    return jnp.einsum("bhlm,bmhd->blhd", p, v)
+
+
+def _attn_blocked(q, k, v):
+    from repro.models.layers import blocked_attention
+
+    return blocked_attention(q, k, v, causal=False, q_chunk=128, k_chunk=128)
+
+
+@functools.partial(jax.jit, static_argnames=("fused_qkv", "blocked", "head_batch"))
+def mha_stage(x, wq, wk, wv, *, fused_qkv: bool, blocked: bool, head_batch: int):
+    if fused_qkv:  # C5: one (D, 3D) MM
+        wqkv = jnp.concatenate(
+            [wq.transpose(1, 0, 2).reshape(D, D), wk.transpose(1, 0, 2).reshape(D, D),
+         wv.transpose(1, 0, 2).reshape(D, D)], axis=1)
+        qkv = x @ wqkv
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, L, H, DH)
+        k = k.reshape(B, L, H, DH)
+        v = v.reshape(B, L, H, DH)
+        attn = _attn_blocked if blocked else _attn_unfused
+        return attn(q, k, v).reshape(B, L, D)
+    # per-head MMs, processed head_batch heads at a time (P_ATB analog)
+    outs = []
+    for h0 in range(0, H, head_batch):
+        hs = slice(h0, h0 + head_batch)
+        q = jnp.einsum("bld,hdk->blhk", x, wq[hs])
+        k = jnp.einsum("bld,hdk->blhk", x, wk[hs])
+        v = jnp.einsum("bld,hdk->blhk", x, wv[hs])
+        attn = _attn_blocked if blocked else _attn_unfused
+        outs.append(attn(q, k, v))
+    return jnp.concatenate(outs, axis=2).reshape(B, L, D)
+
+
+def _derived_speedup(fused_qkv: bool, blocked: bool, head_batch: int) -> float:
+    """v5e roofline model of the lab: MM tile occupancy x softmax HBM trips."""
+    hw = TPU_V5E
+    # QKV MMs: per-head (L x D x DH) vs fused (L x D x 3D)
+    if fused_qkv:
+        spec = pick_pu(B * L, 3 * D, D, hw)
+        mm_t = hw.matmul_time_s(B * L, 3 * D, D)
+        mm_t *= 1.0 + max(pad_overhead(B * L, 3 * D, D, spec), 0.0)
+    else:
+        spec = pick_pu(B * L, DH * head_batch, D, hw)
+        per = hw.matmul_time_s(B * L, DH * head_batch, D)
+        per *= 1.0 + max(pad_overhead(B * L, DH * head_batch, D, spec), 0.0)
+        mm_t = per * (3 * H / head_batch)
+    # attention: blocked keeps scores in VMEM; unfused round-trips them
+    attn_flops = 2 * 2 * B * H * L * L * DH
+    attn_t = attn_flops / hw.peak_flops_bf16
+    if not blocked:
+        score_bytes = 2 * B * H * L * L * 4  # write + read fp32 scores
+        attn_t += score_bytes / hw.hbm_bandwidth
+    return mm_t + attn_t
+
+
+def run() -> list[str]:
+    key = jax.random.PRNGKey(0)
+    x, wq, wk, wv = _mk(key)
+    labs = [
+        ("lab1_baseline", dict(fused_qkv=False, blocked=False, head_batch=1)),
+        ("lab2_pipeline", dict(fused_qkv=False, blocked=True, head_batch=1)),
+        ("lab3_indep_linear", dict(fused_qkv=True, blocked=False, head_batch=H)),
+        ("lab4_pipeline_atb4", dict(fused_qkv=False, blocked=True, head_batch=4)),
+        ("lab5_cat_full", dict(fused_qkv=True, blocked=True, head_batch=H)),
+    ]
+    base_t = None
+    base_d = _derived_speedup(False, False, 1)
+    out = []
+    for name, kw in labs:
+        us = time_fn(mha_stage, x, wq, wk, wv, **kw)
+        if base_t is None:
+            base_t = us
+        pred = base_d / _derived_speedup(**kw)
+        out.append(
+            emit(
+                f"table2/{name}",
+                us,
+                f"cpu_speedup={base_t/us:.2f}x;v5e_pred={pred:.2f}x",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

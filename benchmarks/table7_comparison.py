@@ -1,0 +1,56 @@
+"""Paper Table VII — cross-design comparison, reframed for one platform:
+a naive JAX implementation (the "general framework" a CHARM-style MM-operator
+approach produces) vs the CAT-planned implementation, same BERT-Base model.
+
+naive:  per-head QKV matmuls, materialized-score attention, no epilogue
+        fusion, fp32 scores in HBM.
+cat:    fused QKV, blocked online-softmax attention, epilogue-fused FFN.
+
+CPU wall time + the v5e roofline-predicted throughput ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from benchmarks.table2_parallel_modes import _derived_speedup
+from repro.configs import get_config
+from repro.core.plan import derive_plan
+from repro.models import init_params, lm_loss
+
+B, L = 2, 256
+
+
+def run() -> list[str]:
+    cfg = get_config("bert-base")
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (B, L), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (B, L), 0, cfg.vocab_size),
+    }
+    out = []
+    results = {}
+    for name, fuse in (("naive", False), ("cat", True)):
+        plan = derive_plan(
+            cfg, {"data": 1, "model": 1}, batch=B, seq_len=L, fuse_qkv=fuse
+        )
+        params = init_params(key, cfg, plan, dtype=jnp.float32)
+        fn = jax.jit(lambda p, b, plan=plan: lm_loss(p, b, cfg=cfg, plan=plan))
+        us = time_fn(fn, params, batch, iters=3)
+        results[name] = us
+    pred = _derived_speedup(False, False, 1) / _derived_speedup(True, True, 12)
+    out.append(emit("table7/naive_jax", results["naive"], "speedup=1.00x"))
+    out.append(
+        emit(
+            "table7/cat_planned",
+            results["cat"],
+            f"cpu_speedup={results['naive']/results['cat']:.2f}x;"
+            f"v5e_pred={pred:.2f}x",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""The paper's §V.B design case + accelerator-family derivation for any arch.
+
+    PYTHONPATH=src python examples/derive_accelerator.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/derive_accelerator.py --design-case
+
+--design-case reproduces the BERT-Base walk-through on the paper's own
+VCK5000 numbers (Factor1 ~= 1.5, Factor2 ~= 7.56 MB, P_ATB = 4, fully
+pipelined mode) — the validation anchor against the paper's §V.B.
+"""
+import argparse
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.plan import derive_plan, design_case_vck5000
+from repro.core.pu import derive_pu_family
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--design-case", action="store_true")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    a = ap.parse_args()
+
+    if a.design_case:
+        dc = design_case_vck5000()
+        print("paper §V.B design case (VCK5000, BERT-Base L=256):")
+        for k, v in dc.items():
+            print(f"  {k:26s} = {v if not isinstance(v, float) else round(v, 4)}")
+        print("  (paper reports Factor1~1.5, Factor2=7.5625MB, P_ATB=4,")
+        print("   fully-pipelined mode — all four reproduced)")
+        return
+
+    print("MM PU family for TPU v5e (paper Fig. 4 analog):")
+    for name, spec in derive_pu_family(TPU_V5E).items():
+        print(
+            f"  {name:8s} {spec.block_m}x{spec.block_n}x{spec.block_k} "
+            f"({spec.vmem_bytes/2**20:.1f} MiB VMEM, AI={spec.arithmetic_intensity:.0f})"
+        )
+    archs = [a.arch] if a.arch else list(ALL_ARCHS)
+    for arch in archs:
+        cfg = get_config(arch)
+        for mesh in ({"data": 16, "model": 16}, {"pod": 2, "data": 16, "model": 16}):
+            plan = derive_plan(cfg, mesh, TPU_V5E, batch=a.batch, seq_len=a.seq)
+            print(f"\n--- {arch} on {mesh} ---")
+            print(plan.describe())
+
+
+if __name__ == "__main__":
+    main()

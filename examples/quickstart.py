@@ -1,0 +1,46 @@
+"""Quickstart: derive a CAT accelerator instance, train a tiny LM for a few
+steps, and decode from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.plan import derive_plan
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import run
+from repro.models import init_params
+from repro.serve.engine import greedy_generate
+
+
+def main():
+    # 1. The CAT contract: (model config, mesh, hardware) -> accelerator plan.
+    cfg = get_config("qwen3-1.7b")
+    plan = derive_plan(
+        cfg, {"data": 16, "model": 16}, TPU_V5E, batch=256, seq_len=4096
+    )
+    print("=== derived accelerator instance (production mesh) ===")
+    print(plan.describe())
+
+    # 2. Train the reduced family member on this host for a few steps.
+    print("\n=== training qwen3-1.7b-reduced for 30 steps ===")
+    losses, state = run("qwen3-1.7b-reduced", steps=30, batch=4, seq=64, lr=1e-3)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # 3. Serve: prefill + greedy decode with the trained weights.
+    print("\n=== greedy decode ===")
+    rcfg = get_config("qwen3-1.7b").reduced()
+    host_plan = derive_plan(
+        rcfg, dict(make_host_mesh().shape), batch=2, seq_len=16, training=False
+    )
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, rcfg.vocab_size)
+    }
+    out = greedy_generate(state.params, rcfg, host_plan, batch, n_steps=8, cache_len=32)
+    print("generated token ids:\n", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Checkpointing: mesh-independent layout, atomic manifests, async save,
+elastic restore.
+
+Layout on disk:
+    <dir>/step_<k>/arrays.npz      flattened param/opt leaves ("a/b/c[i]" keys)
+    <dir>/step_<k>/manifest.json   step, tree structure hash, config name
+Manifest is written LAST via atomic rename -> a crashed save never yields a
+"latest" checkpoint.  Arrays are saved in logical (unsharded) layout, so
+restore re-shards onto whatever mesh the new job brings up (elastic scaling).
+Async: the save runs on a background thread over host copies.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float16"):  # npz-unfriendly dtypes
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(
+    directory: str, step: int, tree: PyTree, *, meta: Optional[dict] = None,
+    async_save: bool = False,
+):
+    d = pathlib.Path(directory)
+    tmp = d / f"_tmp_step_{step}"
+    final = d / f"step_{step}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)  # host copies happen here (device_get)
+
+    def _write():
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {
+            "step": step,
+            "n_arrays": len(flat),
+            "total_bytes": int(sum(a.nbytes for a in flat.values())),
+            "time": time.time(),
+            **(meta or {}),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            import shutil
+
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            try:
+                steps.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    like: PyTree,
+    shardings: Optional[PyTree] = None,
+) -> PyTree:
+    """Restore into the structure of ``like``; device_put with ``shardings``
+    re-shards onto the *current* mesh (elastic restore)."""
+    d = pathlib.Path(directory) / f"step_{step}"
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files}
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    return tree

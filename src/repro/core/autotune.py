@@ -1,0 +1,95 @@
+"""Plan autotuner — the CAT design-space search made explicit.
+
+The paper derives one accelerator instance from closed-form rules (Eq. 3-8).
+This module closes the loop the paper leaves open ("a more complete automatic
+deployment framework", §VI): enumerate a small candidate set of plan
+overrides, dry-run-compile each, score by the roofline step time, and return
+the winner with its full iteration log — the §Perf hypothesis loop as a
+subroutine.
+
+    from repro.core.autotune import autotune
+    best = autotune("mixtral-8x7b", TRAIN_4K, multi_pod=False)
+
+Requires the 512-device XLA flag (run under repro.launch.dryrun's process or
+any process that set xla_force_host_platform_device_count before jax import).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.hlo_cost import analyze_hlo
+from repro.core.roofline import _ring_seconds, analytic_memory_floor, model_flops_for
+
+
+@dataclasses.dataclass
+class Candidate:
+    name: str
+    overrides: dict
+    step_s: Optional[float] = None
+    compute_s: Optional[float] = None
+    collective_s: Optional[float] = None
+    fits: Optional[bool] = None
+    error: Optional[str] = None
+
+
+def default_candidates(cfg) -> list[Candidate]:
+    cands = [
+        Candidate("planner-default", {}),
+        Candidate("force-spatial", {"force_mode": "spatial"}),
+        Candidate("force-temporal", {"force_mode": "temporal"}),
+        Candidate("split-qkv", {"fuse_qkv": False}),
+    ]
+    if cfg.is_moe:
+        cands.append(Candidate("moe-sort-dispatch", {"moe_dispatch": "sort"}))
+    return cands
+
+
+def score_candidate(cfg, shape, mesh, cand: Candidate, hw=TPU_V5E) -> Candidate:
+    from repro.launch.dryrun import build_cell  # deferred: needs device flag
+
+    try:
+        fn, args, plan = build_cell(cfg, shape, mesh, plan_overrides=cand.overrides)
+        compiled = fn.lower(*args).compile()
+        hc = analyze_hlo(compiled.as_text())
+        n_chips = 1
+        for v in mesh.shape.values():
+            n_chips *= v
+        compute_s = hc.flops / hw.peak_flops_bf16
+        coll_s = sum(
+            _ring_seconds(o, b, g, hw.ici_bandwidth_per_link) * m
+            for o, b, g, m in hc.collectives
+        )
+        floor_s = analytic_memory_floor(cfg, shape, plan, n_chips) / hw.hbm_bandwidth
+        ma = compiled.memory_analysis()
+        cand.compute_s = compute_s
+        cand.collective_s = coll_s
+        cand.step_s = max(compute_s, coll_s, floor_s)
+        cand.fits = (
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        ) <= hw.hbm_bytes
+    except Exception as e:  # infeasible candidate = informative result
+        cand.error = f"{type(e).__name__}: {e}"
+    return cand
+
+
+def autotune(arch: str, shape, *, multi_pod: bool = False, hw=TPU_V5E,
+             candidates=None, prefer_fitting: bool = True):
+    """Returns (best_candidate, all_candidates) sorted by step time."""
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cands = candidates or default_candidates(cfg)
+    scored = [score_candidate(cfg, shape, mesh, c, hw) for c in cands]
+    ok = [c for c in scored if c.step_s is not None]
+    if prefer_fitting and any(c.fits for c in ok):
+        ok = [c for c in ok if c.fits] or ok
+    ok.sort(key=lambda c: c.step_s)
+    best = ok[0] if ok else None
+    return best, scored

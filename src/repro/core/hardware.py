@@ -1,0 +1,82 @@
+"""Hardware description for the CAT planner.
+
+The paper's "Intrinsic hardware parameters" (Table III) — AIE Window size,
+PLIO bandwidth, core count, on-chip buffer — become the TPU-chip analogues
+below.  Everything the planner decides is a pure function of
+(ArchConfig, Mesh, HardwareSpec), which is the paper's top-down customization
+contract: the underlying hardware and the upper model jointly constrain the
+customizable attributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip + interconnect constants of the target platform."""
+
+    name: str
+    # Compute (paper: AIE core count x per-core throughput).
+    peak_flops_bf16: float  # FLOP/s per chip
+    peak_ops_int8: float  # OP/s per chip
+    # Memory hierarchy (paper: AIE Window / PL BRAM+URAM / DDR).
+    vmem_bytes: int  # on-chip vector memory per chip  (AIE Window analog)
+    hbm_bytes: int  # off-chip HBM capacity per chip   (DDR analog)
+    hbm_bandwidth: float  # bytes/s per chip             (DDR bandwidth analog)
+    # Interconnect (paper: PLIO / NoC).
+    ici_bandwidth_per_link: float  # bytes/s per ICI link
+    ici_links_per_chip: int  # links per chip on a torus axis pair
+    # MXU native tile edge (paper: AIE vector instruction length, power of 2).
+    mxu_dim: int = 128
+
+    @property
+    def machine_balance_bf16(self) -> float:
+        """FLOPs per HBM byte needed to stay compute bound (Eq. 4 analog)."""
+        return self.peak_flops_bf16 / self.hbm_bandwidth
+
+    def matmul_time_s(self, m: int, n: int, k: int, dtype_bytes: int = 2) -> float:
+        """Roofline time for one MxKxN matmul on one chip."""
+        flops = 2.0 * m * n * k
+        peak = self.peak_flops_bf16 if dtype_bytes >= 2 else self.peak_ops_int8
+        t_compute = flops / peak
+        bytes_moved = dtype_bytes * (m * k + k * n + m * n)
+        t_memory = bytes_moved / self.hbm_bandwidth
+        return max(t_compute, t_memory)
+
+
+# TPU v5e constants per the task spec (197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI); VMEM/HBM capacities are the public v5e numbers.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_ops_int8=394e12,
+    vmem_bytes=128 * 1024 * 1024,
+    hbm_bytes=16 * 1024**3,
+    hbm_bandwidth=819e9,
+    ici_bandwidth_per_link=50e9,
+    ici_links_per_chip=4,
+)
+
+# The paper's platform, kept for the Table VI/VII benchmark analogs
+# (VCK5000: 400 AIE cores, 145 TOPS int8, 23.9 MB SRAM @ 23.5 TB/s,
+#  16 GB DDR @ 102.4 GB/s).
+VCK5000 = HardwareSpec(
+    name="vck5000",
+    peak_flops_bf16=145e12 / 4,  # no native bf16 MM at full rate; int8 is the paper's mode
+    peak_ops_int8=145e12,
+    vmem_bytes=int(23.9e6),
+    hbm_bytes=16 * 1024**3,
+    hbm_bandwidth=102.4e9,
+    ici_bandwidth_per_link=0.0,  # single device
+    ici_links_per_chip=0,
+)
+
+DEFAULT_HARDWARE = TPU_V5E
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    table = {"tpu_v5e": TPU_V5E, "vck5000": VCK5000}
+    if name not in table:
+        raise KeyError(f"unknown hardware {name!r}; have {sorted(table)}")
+    return table[name]

@@ -1,0 +1,285 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+which under-counts a scanned-layer transformer by ~n_layers x microbatches.
+This module re-derives FLOPs / HBM-byte / collective totals by walking the
+optimized HLO text:
+
+  * parse every computation into a symbol table (op name -> shape/dtype),
+  * extract while-loop trip counts from their condition computations
+    (the loop bound constant),
+  * propagate multipliers along the call graph
+    (entry=1; while body/cond x trip; fusion/call/to_apply inherit),
+  * FLOPs from dot/convolution ops (2 x prod(out) x prod(contracting)),
+  * HBM traffic from top-level op outputs + resolved operand reads
+    (fusion-internal ops never touch HBM and are skipped),
+  * collectives with their replica group size, multiplied like any other op.
+
+Used by the dry-run roofline; ``cost_analysis()`` is kept alongside as a
+cross-check (they agree on scan-free graphs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "  %name = bf16[1,2,3]{2,1,0} opcode(...)" or tuple results
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"\)?\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w\.\-,% ]+)\}?"
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) across a (possibly tuple) HLO type string."""
+    elems = byts = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_bytes: int
+    type_str: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict  # name -> OpInfo
+    order: list
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # computation header: "%name (args) -> type {"  or "ENTRY %name ..."
+        if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1), {}, [])
+                comps[cur.name] = cur
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs = "bf16[..]{..} opcode(...)" — first shapes are the result type
+        om = _OPCODE_RE.search(rhs)
+        # opcode token: word right before '('
+        opm = re.search(r"([\w\-]+)\(", rhs)
+        opcode = opm.group(1) if opm else "unknown"
+        # result type = rhs up to the opcode occurrence
+        type_end = rhs.find(opcode + "(") if opm else len(rhs)
+        type_str = rhs[:type_end]
+        _, out_bytes = _shape_elems_bytes(type_str)
+        info = OpInfo(name, opcode, out_bytes, type_str, stripped)
+        cur.ops[name] = info
+        cur.order.append(name)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation (largest int constant)."""
+    best = 1
+    for name in cond.order:
+        mm = _CONST_RE.search(cond.ops[name].line)
+        if mm:
+            best = max(best, int(mm.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = None
+    for name in comps:
+        if name.startswith("main") or name.startswith("%main"):
+            entry = name
+    if entry is None:  # fall back: computation not called by anyone
+        called = set()
+        for c in comps.values():
+            for op in c.ops.values():
+                for cm in _CALL_ATTR_RE.finditer(op.line):
+                    for t in re.split(r"[ ,]+", cm.group(1)):
+                        called.add(t.strip().lstrip("%"))
+        roots = [n for n in comps if n not in called]
+        entry = roots[0] if roots else next(iter(comps))
+
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        comp = comps[name]
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                trip = 1
+                if cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)])
+                if bm:
+                    visit(bm.group(1), m * trip)
+                if cm:
+                    visit(cm.group(1), m * trip)
+            else:
+                for cm in _CALL_ATTR_RE.finditer(op.line):
+                    for t in re.split(r"[ ,]+", cm.group(1)):
+                        t = t.strip().lstrip("%")
+                        if t:
+                            visit(t, m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    cm = _CONTRACT_RE.search(op.line)
+    if not cm:
+        return 2.0 * out_elems  # degenerate
+    cdims = [int(x) for x in cm.group(1).split(",") if x]
+    # resolve lhs operand shape from the symbol table
+    args = op.line[op.line.find("("):]
+    ops_in = _OPERAND_RE.findall(args)
+    contr = 1
+    if ops_in:
+        lhs = comp.ops.get(ops_in[0])
+        if lhs is not None:
+            shapes = _SHAPE_RE.findall(lhs.type_str)
+            if shapes:
+                dims = [int(d) for d in shapes[-1][1].split(",") if d]
+                for c in cdims:
+                    if c < len(dims):
+                        contr *= dims[c]
+    return 2.0 * out_elems * contr
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collectives: list  # (opcode, operand_bytes, group_size, multiplier)
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(b * m for _, b, _, m in self.collectives)
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    mult = _multipliers(comps)
+    flops = 0.0
+    hbm = 0.0
+    colls: list = []
+    fusion_bodies = set()
+    for comp in comps.values():
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode == "fusion":
+                cm = re.search(r"calls=%?([\w\.\-]+)", op.line)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for opn in comp.order:
+            op = comp.ops[opn]
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            if in_fusion:
+                continue  # fusion-internal ops do not touch HBM
+            if op.opcode in ("parameter", "constant", "tuple", "get-tuple-element",
+                             "bitcast", "while", "conditional", "call", "reshape",
+                             "iota", "after-all", "custom-call", "partition-id"):
+                continue
+            args = op.line[op.line.find("("):] if "(" in op.line else ""
+            operands = [
+                comp.ops[o]
+                for o in _OPERAND_RE.findall(args)
+                if o in comp.ops and comp.ops[o].opcode != "constant"
+            ]
+            if op.opcode == "dynamic-slice":
+                # reads only the slice, not the sliced-from buffer
+                hbm += m * 2 * op.out_bytes
+            elif op.opcode == "dynamic-update-slice":
+                # in-place: touches only the update window (operand[1])
+                upd = operands[1].out_bytes if len(operands) > 1 else op.out_bytes
+                hbm += m * 2 * upd
+            elif op.opcode == "gather":
+                hbm += m * 2 * op.out_bytes
+            elif op.opcode == "scatter":
+                upd = operands[-1].out_bytes if operands else op.out_bytes
+                hbm += m * 2 * upd
+            else:
+                # writes: own output; reads: resolved operands
+                hbm += m * op.out_bytes
+                for src in operands:
+                    hbm += m * src.out_bytes
+
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in _COLL_OPS:
+                g = 1
+                gm = _GROUPS_IOTA_RE.search(op.line)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gb = _GROUPS_BRACES_RE.search(op.line)
+                    if gb:
+                        g = len(gb.group(1).split(","))
+                out_b = op.out_bytes
+                if base == "all-gather":
+                    operand_b = out_b // max(g, 1)
+                elif base == "reduce-scatter":
+                    operand_b = out_b * g
+                else:
+                    operand_b = out_b
+                colls.append((base, operand_b, g, m))
+    return HloCost(flops=flops, hbm_bytes=hbm, collectives=colls)

@@ -1,0 +1,350 @@
+"""The CAT customization strategy: derive an accelerator instance from
+(model config, mesh, hardware).
+
+Paper §IV: three customizable attributes are decided top-down —
+  1. AIE MM PU scale        -> per-MM-site Pallas tile specs (core/pu.py)
+  2. Parallel mode (Eq.5/6) -> SPATIAL (TP, fully-pipelined analog) vs
+                               TEMPORAL (ZeRO-DP, serial-using-all-resources
+                               analog), plus remat/microbatch from Factor2'
+  3. ATB parallelism (Eq.7/8) -> attention head-shard degree P_ATB
+
+The plan is a frozen dataclass: a pure function of its inputs, hashable, and
+used as a static argument of jitted step functions.  `design_case_vck5000`
+reproduces the paper's §V.B BERT-Base walk-through numbers (Factor1 ~= 1.5,
+Factor2 ~= 7.56 MB) on the paper's own hardware constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional
+
+from repro.core.hardware import DEFAULT_HARDWARE, VCK5000, HardwareSpec
+from repro.core.pu import MMTileSpec, derive_pu_family, pick_pu
+
+# Paper constant: EDPU pipeline has at most 4 PRGs in flight per stage.
+PRG_MAX_PIPELINE_DEPTH = 4
+
+SPATIAL = "spatial"  # paper parallel mode (1): fully-pipelined, sliced fabric
+TEMPORAL = "temporal"  # paper parallel mode (2): serial PRGs, each uses all chips
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """Per-stage (MHA / FFN) decision record."""
+
+    mode: str  # SPATIAL | TEMPORAL
+    factor1: float  # Eq.5/6 Factor1 analog (diagnostic, logged)
+    factor2_bytes: int  # Eq.5/6 Factor2 analog: activation bytes/chip, no remat
+    pu: MMTileSpec  # MM PU spec chosen for this stage's dominant MM
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The derived accelerator instance for one (arch x mesh x shape)."""
+
+    arch: str
+    mesh_axes: tuple[tuple[str, int], ...]  # e.g. (("data",16),("model",16))
+    mha: StagePlan
+    ffn: StagePlan
+    # C5: Independent-Linear — aggregate per-head QKV into one MM.
+    fuse_qkv: bool
+    # C4/P_ATB: attention-block parallel degree (heads consumed in parallel).
+    p_atb: int
+    # Head sharding degree over the model axis (0 = heads not sharded).
+    head_shards: int
+    # Activation checkpointing + gradient accumulation (Factor2' outcome).
+    remat: bool
+    microbatches: int
+    # Embedding partition dim: "vocab" | "embed" | "replicated".
+    embed_shard: str
+    # MoE execution mode: "ep" (experts sharded) | "tp" (d_ff sharded) | "none".
+    moe_mode: str
+    # Sequence parallelism for long-context cells (batch < data axis).
+    seq_shard: bool
+    # MoE dispatch algorithm: "gshard" grouped-einsum (baseline) | "sort".
+    moe_dispatch: str = "gshard"
+    # TEMPORAL mode folds the model axis into data parallelism (FSDP): the
+    # paper's "each PRG uses ALL compute resources in turn" — without this
+    # the model-axis chips would duplicate work (16/17 of FLOPs wasted).
+    dp_over_model: bool = False
+    # ZeRO/FSDP hybrid: weights + optimizer state also sharded over `data`
+    # (needed when 12B/param x params / model_axis exceeds HBM).
+    zero_weights: bool = False
+    # Megatron-style sequence parallelism: the residual stream (and thus every
+    # remat-saved layer input) is sharded over `model` on the seq dim.
+    seq_parallel_acts: bool = False
+    # Pod-axis role: "data" (extra DP) or "pipeline" (multi-EDPU pipelining, C9).
+    pod_role: str = "data"
+
+    @property
+    def model_axis(self) -> int:
+        return dict(self.mesh_axes).get("model", 1)
+
+    @property
+    def data_axis(self) -> int:
+        return dict(self.mesh_axes).get("data", 1)
+
+    @property
+    def pod_axis(self) -> int:
+        return dict(self.mesh_axes).get("pod", 1)
+
+    def describe(self) -> str:
+        rows = [
+            f"accelerator instance for {self.arch}",
+            f"  mesh            : {dict(self.mesh_axes)} (pod role: {self.pod_role})",
+            f"  MHA stage       : mode={self.mha.mode} factor1={self.mha.factor1:.3f} "
+            f"factor2={self.mha.factor2_bytes/1e6:.1f}MB pu={self.mha.pu.name}"
+            f"({self.mha.pu.block_m}x{self.mha.pu.block_n}x{self.mha.pu.block_k})",
+            f"  FFN stage       : mode={self.ffn.mode} factor1={self.ffn.factor1:.3f} "
+            f"factor2={self.ffn.factor2_bytes/1e6:.1f}MB pu={self.ffn.pu.name}"
+            f"({self.ffn.pu.block_m}x{self.ffn.pu.block_n}x{self.ffn.pu.block_k})",
+            f"  fuse_qkv (C5)   : {self.fuse_qkv}",
+            f"  P_ATB (C4)      : {self.p_atb} (head_shards={self.head_shards})",
+            f"  remat/microbatch: {self.remat}/{self.microbatches}",
+            f"  embed shard     : {self.embed_shard}   moe: {self.moe_mode}"
+            f"   seq_shard: {self.seq_shard}",
+        ]
+        return "\n".join(rows)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0 and cap % d == 0:
+            return d
+    return 1
+
+
+def derive_plan(
+    cfg,
+    mesh_shape: Mapping[str, int],
+    hw: HardwareSpec = DEFAULT_HARDWARE,
+    *,
+    batch: int = 8,
+    seq_len: int = 2048,
+    training: bool = True,
+    fuse_qkv: Optional[bool] = None,
+    force_mode: Optional[str] = None,
+    pod_role: str = "data",
+    dtype_bytes: int = 2,
+    moe_dispatch: str = "gshard",
+) -> ExecutionPlan:
+    """Top-down derivation (paper §IV): hardware + model jointly decide."""
+    ma = mesh_shape.get("model", 1)
+    da = mesh_shape.get("data", 1)
+    family = derive_pu_family(hw, dtype_bytes)
+
+    # ---- Eq.5 Factor1 (MHA): LB MM scale / engine one-shot MM scale. -------
+    lb_mm_volume = 4.0 * seq_len * cfg.d_model * cfg.n_heads * cfg.d_head
+    engine_volume = float(ma) * family["LARGE"].block_m * family[
+        "LARGE"
+    ].block_n * family["LARGE"].block_k
+    mha_factor1 = lb_mm_volume / engine_volume
+
+    # ---- Eq.6 Factor1 (FFN). ------------------------------------------------
+    ffn_volume = 2.0 * seq_len * cfg.d_model * cfg.d_ff
+    ffn_factor1 = ffn_volume / engine_volume
+
+    # ---- GSPMD divisibility (needed by Factor2' and the mode decision). ----
+    heads_div = cfg.n_heads % ma == 0 and (cfg.n_kv_heads % ma == 0 or cfg.n_kv_heads < ma)
+    ffn_shard_w = cfg.effective_ff_width()
+    ffn_div = ffn_shard_w % ma == 0 and (ffn_shard_w // ma) >= hw.mxu_dim
+    tp_feasible = heads_div and cfg.d_model % ma == 0
+
+    # ---- Factor2': activation bytes per chip if nothing is rematerialized. --
+    tokens = batch * seq_len
+    tokens_per_chip = tokens / max(da, 1)
+    width_frac = 1.0 / ma  # hidden sharded over model axis in SPATIAL mode
+    qkv_width = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+    mha_act = tokens_per_chip * (cfg.d_model + qkv_width + cfg.n_heads * cfg.d_head)
+    ffn_act = tokens_per_chip * (cfg.d_model + 2 * cfg.effective_ff_width())
+    mha_factor2 = int(mha_act * dtype_bytes * width_frac * cfg.n_layers)
+    ffn_factor2 = int(ffn_act * dtype_bytes * width_frac * cfg.n_layers)
+    # Attention probabilities (fp32) are the big saved residual without remat:
+    # tokens_per_chip x kv-extent x heads x 4B per attention layer.
+    attn_layers = sum(
+        1 for i in range(cfg.n_layers) if cfg.layer_kind(i) in ("attn", "swa", "local")
+    )
+    eff_kv = min(seq_len, cfg.sliding_window or seq_len)
+    probs = tokens_per_chip * eff_kv * cfg.n_heads * 4.0
+    mha_factor2 += int(probs * attn_layers / (ma if tp_feasible else 1))
+
+    # The batch can fold over the model axis (TEMPORAL -> FSDP, no duplicate
+    # compute) only when it divides the full dp extent.
+    can_fold = batch % max(da * ma, 1) == 0 and batch >= da
+
+    def decide(factor1: float, factor2: int, feasible: bool) -> str:
+        if force_mode:
+            return force_mode
+        return SPATIAL if feasible else TEMPORAL
+
+    mha_mode = decide(mha_factor1, mha_factor2, tp_feasible)
+    ffn_mode = decide(ffn_factor1, ffn_factor2, ffn_div and cfg.d_model % ma == 0)
+
+    # Paper Eq.5/6 restored (§Perf iteration 6): when the model's MM scale
+    # dwarfs the engine's one-shot scale (Factor1 >= PRG depth), the paper
+    # picks mode (2) — serial, each PRG using ALL compute.  On TPU that is
+    # FSDP with the model axis folded into DP.  Measured on
+    # mistral-large/train_4k: collective 112s -> (see EXPERIMENTS §Perf).
+    # My earlier "spatial always wins when divisible" deviation was wrong for
+    # compute-huge dense models.  MoE keeps its spatial/EP FFN (expert
+    # weights are consumed by few tokens each — gathering them all per layer
+    # would not amortize).
+    if (
+        training
+        and not cfg.is_moe
+        and can_fold
+        and force_mode is None
+        and max(mha_factor1, ffn_factor1) >= PRG_MAX_PIPELINE_DEPTH
+    ):
+        mha_mode = TEMPORAL
+        ffn_mode = TEMPORAL
+
+    seq_shard = batch % max(da, 1) != 0 or batch < da
+    dp_over_model = (
+        mha_mode == TEMPORAL
+        and ffn_mode == TEMPORAL
+        and not seq_shard
+        and batch % max(da * ma, 1) == 0
+    )
+
+    # ---- P_ATB (Eq.7/8): heads consumed in parallel per fused-QKV output. --
+    head_shards = _largest_divisor_leq(cfg.n_heads, ma) if mha_mode == SPATIAL else 1
+    if cfg.n_heads % max(head_shards, 1):
+        head_shards = 1
+    p_atb = max(1, cfg.n_heads // max(head_shards, 1))
+
+    # ---- PU selection per stage (C2). ---------------------------------------
+    mha_m = seq_len * batch // max(da, 1)
+    mha_pu = pick_pu(mha_m, qkv_width // max(head_shards, 1), cfg.d_model, hw, dtype_bytes)
+    ffn_pu = pick_pu(
+        mha_m,
+        max(ffn_shard_w // (ma if ffn_mode == SPATIAL else 1), hw.mxu_dim),
+        cfg.d_model,
+        hw,
+        dtype_bytes,
+    )
+
+    # ---- Factor2' outcome: ZeRO weights + remat + microbatches. -------------
+    # Optimizer state (bf16 params + fp32 m/v + grad ~ 12B/param when
+    # training; just the bf16 weights when serving) sharded over the model
+    # axis only can exceed HBM for 100B-class models: shard the complementary
+    # weight dim over `data` too (ZeRO/FSDP hybrid; for decode the act
+    # all-reduces at tiny batch are ~free, so 2-D weight sharding is pure win).
+    bytes_per_param = 12.0 if training else float(dtype_bytes)
+    param_bytes_model_only = cfg.param_count() * bytes_per_param / ma
+    # Inference threshold is deliberately high (§Perf cell-3 iteration): 2-D
+    # weight sharding at decode forces per-token weight all-gathers over
+    # `data` (measured 70x step-time regression on mistral decode when
+    # applied below need).  Only shard 2-D when weights would not otherwise
+    # fit; the designed answer for capacity-tight serving is the int8
+    # mm_pu path (the paper's own Int8 deployment mode).
+    zero_weights = param_bytes_model_only > (0.35 if training else 1.0) * hw.hbm_bytes
+    param_bytes = param_bytes_model_only / (da if zero_weights else 1)
+    act_budget = max(hw.hbm_bytes - param_bytes, hw.hbm_bytes * 0.25)
+    total_act = mha_factor2 + ffn_factor2
+    remat = training and total_act > 0.25 * act_budget
+    # §Perf iteration log: Megatron-SP via a pjit sharding constraint alone
+    # was REFUTED twice on mistral-large (112s -> 144s collective at micro=2;
+    # 935s at micro=16 — GSPMD thrashes between seq-sharded residuals and
+    # gathered attention inputs).  Proper SP needs shard_map-manual
+    # collectives; the flag stays off until then.
+    seq_parallel_acts = False
+    # remat-saved layer inputs.  NOTE §Perf iteration log: crediting SP with
+    # a /model_axis here (and so cutting microbatches 16->2) was REFUTED on
+    # mistral-large — per-microbatch transients grew 8x and temp went 26->35
+    # GB.  The SP constraint stays, the memory credit does not.
+    saved_per_layer = tokens_per_chip * cfg.d_model * dtype_bytes
+    resid = saved_per_layer * cfg.n_layers
+    # per-microbatch global batch must stay divisible by the DP extent,
+    # otherwise GSPMD replicates tokens (measured: 21x FLOPs waste).
+    dp_total = da * (ma if dp_over_model else 1)
+    micro_cap = max(1, batch // max(dp_total, 1))
+    microbatches = 1
+    while (
+        training
+        and resid / microbatches > 0.5 * act_budget
+        and microbatches * 2 <= micro_cap
+        and batch % (microbatches * 2) == 0
+    ):
+        microbatches *= 2
+
+    # ---- Embedding + MoE + sequence sharding. -------------------------------
+    if cfg.vocab_size % ma == 0:
+        embed_shard = "vocab"
+    elif cfg.d_model % ma == 0:
+        embed_shard = "embed"
+    else:
+        embed_shard = "replicated"
+    if cfg.n_experts > 1:
+        if cfg.n_experts % ma == 0:
+            moe_mode = "ep"
+        elif cfg.moe_d_ff % ma == 0 and cfg.moe_d_ff // ma >= hw.mxu_dim:
+            moe_mode = "tp"
+        else:
+            moe_mode = "none"
+    else:
+        moe_mode = "none"
+    # C5 (Independent-Linear): fused QKV everywhere.  §Perf iteration log:
+    # the hypothesis that a fused (q+2kv) column shard misaligned with GQA
+    # boundaries causes resharding all-reduces was REFUTED on
+    # mistral-large/train_4k — splitting the projections replaced XLA's cheap
+    # collective-permutes (341 GB) with all-reduces (+567 GB): keep fused.
+    if fuse_qkv is None:
+        fuse_qkv = cfg.fused_qkv_ok()
+
+    return ExecutionPlan(
+        arch=cfg.name,
+        mesh_axes=tuple(sorted(mesh_shape.items())),
+        mha=StagePlan(mha_mode, mha_factor1, mha_factor2, mha_pu),
+        ffn=StagePlan(ffn_mode, ffn_factor1, ffn_factor2, ffn_pu),
+        fuse_qkv=fuse_qkv,
+        p_atb=p_atb,
+        head_shards=head_shards,
+        remat=remat,
+        microbatches=max(1, microbatches),
+        embed_shard=embed_shard,
+        moe_mode=moe_mode,
+        moe_dispatch=moe_dispatch,
+        seq_shard=seq_shard,
+        dp_over_model=dp_over_model,
+        zero_weights=zero_weights,
+        seq_parallel_acts=seq_parallel_acts,
+        pod_role=pod_role,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper §V.B design case, on the paper's own hardware numbers.
+# ---------------------------------------------------------------------------
+def design_case_vck5000(seq_len: int = 256, d_model: int = 768, d_ff: int = 3072,
+                        n_heads: int = 12) -> dict:
+    """Reproduce the BERT-Base walk-through: Factor1 ~= 1.5, Factor2 ~= 7.56 MB,
+    P_ATB = 4, fully-pipelined mode selected (paper §V.B)."""
+    plio_aie, mmsz, total_aie = 4, 64, 400
+    engine = (total_aie // plio_aie**2) * (plio_aie * mmsz) ** 3
+    factor1 = 4 * seq_len * d_model**2 / engine
+    d_head = d_model // n_heads
+    buf = (
+        seq_len * 256 * 3  # QKV LB output cache (int8 paper accounting)
+        + seq_len * d_head * 4 * 4  # ATB in/out cache
+        + 128 * seq_len * 4  # ATB attention cache
+        + seq_len * 256 * 4  # ATB KV cache
+        + seq_len * d_model + seq_len * 256  # Proj LB in/out
+        + d_model * d_model * 4 + d_model * d_ff * 2  # weight cache
+    )
+    p_atb = 256 // d_head  # QKV LB emits 256-wide tiles; one head needs d_head
+    mode = (
+        SPATIAL
+        if factor1 < PRG_MAX_PIPELINE_DEPTH and buf <= VCK5000.vmem_bytes
+        else TEMPORAL
+    )
+    return {
+        "factor1": factor1,
+        "factor2_bytes": buf,
+        "factor2_mb": buf / 2**20,
+        "p_atb": p_atb,
+        "mode": mode,
+        "prg_max_pipeline_depth": PRG_MAX_PIPELINE_DEPTH,
+        "buffer_budget_mb": VCK5000.vmem_bytes / 2**20,
+    }

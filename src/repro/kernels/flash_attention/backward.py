@@ -1,0 +1,108 @@
+"""custom_vjp for the flash-attention op: FlashAttention-style backward with
+score recomputation (nothing quadratic is saved between fwd and bwd).
+
+Forward saves only (o, lse) per row; backward recomputes the (bq x bk) score
+blocks in VMEM and accumulates dq/dk/dv — the training-path counterpart of
+the paper's "softmax rides the MM dataflow" (C6).  The block-level math here
+is the jnp reference of a dedicated bwd Pallas kernel; the fwd Pallas kernel
+(kernel.py) plugs into ``flash_attention_vjp`` unchanged on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fwd_with_lse(q, k, v, *, n_q_per_kv, causal, window, prefix, scale):
+    """Oracle forward that also returns the logsumexp rows (BH, Sq)."""
+    BH, Sq, D = q.shape
+    kk = jnp.repeat(k, n_q_per_kv, axis=0)
+    vv = jnp.repeat(v, n_q_per_kv, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    mask = _mask(Sq, k.shape[1], causal, window, prefix)
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = s.max(-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(s - m[..., None]), -1))
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype), lse
+
+
+def _mask(Sq, Sk, causal, window, prefix):
+    iq = jnp.arange(Sq)[:, None]
+    ik = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        c = iq >= ik
+        if prefix > 0:
+            c |= ik < prefix
+        m &= c
+    if window > 0:
+        m &= (iq - ik) < window
+    return m
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention_vjp(q, k, v, n_q_per_kv, causal, window, prefix, scale):
+    o, _ = _fwd_with_lse(
+        q, k, v, n_q_per_kv=n_q_per_kv, causal=causal, window=window,
+        prefix=prefix, scale=scale,
+    )
+    return o
+
+
+def _vjp_fwd(q, k, v, n_q_per_kv, causal, window, prefix, scale):
+    o, lse = _fwd_with_lse(
+        q, k, v, n_q_per_kv=n_q_per_kv, causal=causal, window=window,
+        prefix=prefix, scale=scale,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(n_q_per_kv, causal, window, prefix, scale, res, do):
+    q, k, v, o, lse = res
+    BH, Sq, D = q.shape
+    G = n_q_per_kv
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    q32, do32, o32 = (t.astype(jnp.float32) for t in (q, do, o))
+    # recompute p from (q, k, lse): the flash backward identity
+    s = jnp.einsum("bqd,bkd->bqk", q32, kk.astype(jnp.float32)) * scale
+    mask = _mask(Sq, k.shape[1], causal, window, prefix)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - lse[..., None])
+    # dv = p^T do ; dp = do v^T ; ds = p * (dp - rowsum(do * o))
+    dv_full = jnp.einsum("bqk,bqd->bkd", p, do32)
+    dp = jnp.einsum("bqd,bkd->bqk", do32, vv.astype(jnp.float32))
+    delta = jnp.sum(do32 * o32, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, kk.astype(jnp.float32))
+    dk_full = jnp.einsum("bqk,bqd->bkd", ds, q32)
+    # fold GQA groups back onto shared kv heads
+    BKH = k.shape[0]
+    dk = dk_full.reshape(BKH, G, *dk_full.shape[1:]).sum(1)
+    dv = dv_full.reshape(BKH, G, *dv_full.shape[1:]).sum(1)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def flash_attention_grad(q, k, v, *, causal=True, window=0, prefix=0):
+    """(B, S, H, D) layout wrapper with the custom backward."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KH, -1, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KH, -1, D)
+    out = flash_attention_vjp(qr, kr, vr, G, causal, window, prefix, scale)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

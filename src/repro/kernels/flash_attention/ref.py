@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: exact masked softmax attention (materializes scores)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q, k, v, *, n_q_per_kv: int, causal: bool, window: int = 0, prefix: int = 0,
+    softmax_scale=None,
+):
+    """Same layout contract as the kernel: q (BH,Sq,D), kv (BKH,Sk,D)."""
+    BH, Sq, D = q.shape
+    BKH, Sk, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, n_q_per_kv, axis=0)
+    vv = jnp.repeat(v, n_q_per_kv, axis=0)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    iq = jnp.arange(Sq)[:, None]
+    ik = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        c = iq >= ik
+        if prefix > 0:
+            c |= ik < prefix
+        mask &= c
+    if window > 0:
+        mask &= (iq - ik) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the MM PU kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x, activation: str):
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    if activation == "relu":
+        return jax.nn.relu(x)
+    if activation == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    return x
+
+
+def mm_pu_ref(
+    x, w, *, bias=None, residual=None, w_scale=None, activation="none",
+    out_dtype=None
+):
+    out_dtype = out_dtype or x.dtype
+    wf = w.astype(jnp.float32)
+    if w_scale is not None:
+        wf = wf * w_scale.astype(jnp.float32)
+    r = jnp.dot(x.astype(jnp.float32), wf, preferred_element_type=jnp.float32)
+    if bias is not None:
+        r = r + bias.astype(jnp.float32)
+    r = _act(r, activation)
+    if residual is not None:
+        r = r + residual.astype(jnp.float32)
+    return r.astype(out_dtype)
+
+
+def quantize_weights_int8(w):
+    """Per-output-channel symmetric int8 (the paper's Int8 deployment mode)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,28 @@
+"""Sequential-scan oracle for the WKV kernel (kernel layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, logw, u, *, n_heads: int):
+    """r/k/v/logw: (BH, S, D); u: (H, D). Returns (BH, S, D)."""
+    BH, S, D = r.shape
+    H = n_heads
+    B = BH // H
+    w = jnp.exp(logw.astype(jnp.float32))
+    uu = jnp.tile(u.astype(jnp.float32), (B, 1))  # (BH, D)
+
+    def step(S_state, xs):
+        rt, kt, vt, wt = xs  # (BH, D)
+        kv = kt[:, :, None] * vt[:, None, :]
+        out = jnp.einsum("bk,bkd->bd", rt, S_state + uu[:, :, None] * kv)
+        S_new = wt[:, :, None] * S_state + kv
+        return S_new, out
+
+    xs = tuple(
+        t.swapaxes(0, 1).astype(jnp.float32) for t in (r, k, v, w)
+    )
+    S0 = jnp.zeros((BH, D, D), jnp.float32)
+    _, outs = lax.scan(step, S0, xs)
+    return outs.swapaxes(0, 1).astype(r.dtype)

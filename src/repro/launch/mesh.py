@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis role is a
+plan decision (extra DP by default; pipeline stages optionally — C9).
+
+A function, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_axes_dict(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1x1xN debug mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,13 @@
+from repro.models.transformer import edpu_layer, forward, lm_loss, logits_fn
+from repro.models.params import init_params
+from repro.models.cache import cache_from_prefill, init_cache
+
+__all__ = [
+    "edpu_layer",
+    "forward",
+    "lm_loss",
+    "logits_fn",
+    "init_params",
+    "init_cache",
+    "cache_from_prefill",
+]

@@ -1,0 +1,176 @@
+"""Decode caches.
+
+Per layer kind:
+  attn/swa/local : {"k","v": (B, Sc, KV, Dh), "t": ()}   Sc = window for
+                   windowed layers (ring buffer; softmax is permutation-
+                   invariant over kv so ring order is free), else cache_len.
+  rglru          : {"h": (B, W), "conv": (B, cw-1, W)}
+  rwkv6          : {"rwkv": {"S": (B,H,D,D), "shift": (B,d)}, "cmix": (B,d)}
+Enc-dec adds {"memory": (B, Se, d)} and per-decoder-layer {"cross_kv"}.
+
+The cache tree mirrors params ({"stack": ..., "tail": ...}) so the layer scan
+threads it.  ``init_cache`` builds zero caches (or ShapeDtypeStructs under
+``jax.eval_shape`` for the dry-run); ``cache_from_prefill`` turns a
+collect_cache=True forward pass into a decode-ready cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import ExecutionPlan
+
+PyTree = Any
+
+
+def _layer_cache(cfg: ArchConfig, kind: str, B: int, cache_len: int, dtype):
+    KV, Dh, d = cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    entry: dict = {}
+    if kind in ("attn", "swa", "local"):
+        window = (
+            cfg.sliding_window
+            if kind == "swa"
+            else cfg.local_window if kind == "local" else 0
+        )
+        Sc = min(window, cache_len) if window else cache_len
+        entry["attn"] = {
+            "k": jnp.zeros((B, Sc, KV, Dh), dtype),
+            "v": jnp.zeros((B, Sc, KV, Dh), dtype),
+            "t": jnp.zeros((), jnp.int32),
+        }
+    elif kind == "rglru":
+        W = cfg.lru_width or cfg.d_model
+        entry["rglru"] = {
+            "h": jnp.zeros((B, W), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, W), jnp.float32),
+        }
+    elif kind == "rwkv6":
+        H = cfg.rnn_heads
+        entry["rwkv"] = {
+            "S": jnp.zeros((B, H, Dh, Dh), jnp.float32),
+            "shift": jnp.zeros((B, d), jnp.float32),
+        }
+        entry["cmix"] = jnp.zeros((B, d), jnp.float32)
+    if cfg.enc_dec:
+        entry["cross_kv"] = (
+            jnp.zeros((B, cfg.enc_seq, KV, Dh), dtype),
+            jnp.zeros((B, cfg.enc_seq, KV, Dh), dtype),
+        )
+    return entry
+
+
+def init_cache(
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    batch_size: int,
+    cache_len: int,
+    dtype=jnp.bfloat16,
+) -> PyTree:
+    pattern = cfg.layer_pattern
+    n_full, rem = divmod(cfg.n_layers, len(pattern))
+
+    def group(_):
+        return tuple(
+            _layer_cache(cfg, kind, batch_size, cache_len, dtype) for kind in pattern
+        )
+
+    groups = [group(i) for i in range(n_full)]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) if n_full else None
+    tail = tuple(
+        _layer_cache(cfg, pattern[i], batch_size, cache_len, dtype)
+        for i in range(rem)
+    )
+    cache: dict = {
+        "layers": {"stack": stack, "tail": tail},
+        "t": jnp.zeros((), jnp.int32),
+    }
+    if cfg.enc_dec:
+        cache["memory"] = jnp.zeros((batch_size, cfg.enc_seq, cfg.d_model), dtype)
+    return cache
+
+
+def _kv_to_ring(k: jax.Array, v: jax.Array, Sc: int, dtype):
+    """Place a prefill's (B,S,KV,D) kv into an Sc-slot cache at slot = pos % Sc."""
+    B, S, KV, Dh = k.shape
+    if S <= Sc:
+        pad = [(0, 0), (0, Sc - S), (0, 0), (0, 0)]
+        return jnp.pad(k, pad).astype(dtype), jnp.pad(v, pad).astype(dtype)
+    keep = jnp.arange(S - Sc, S)
+    slots = keep % Sc
+    kk = jnp.zeros((B, Sc, KV, Dh), dtype).at[:, slots].set(
+        k[:, keep].astype(dtype)
+    )
+    vv = jnp.zeros((B, Sc, KV, Dh), dtype).at[:, slots].set(
+        v[:, keep].astype(dtype)
+    )
+    return kk, vv
+
+
+def cache_from_prefill(
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    prefill_cache: PyTree,
+    cache_len: int,
+    dtype=jnp.bfloat16,
+) -> PyTree:
+    """Convert the collect_cache=True output of ``forward`` into a decode cache.
+
+    Call outside jit (the prefill length is read as a python int)."""
+    S = int(prefill_cache["t"])
+    pattern = cfg.layer_pattern
+    layers = prefill_cache["layers"]
+
+    def convert_entry(entry, kind):
+        e = dict(entry)
+        if "kv_out" in e:
+            k, v = e.pop("kv_out")
+            window = (
+                cfg.sliding_window
+                if kind == "swa"
+                else cfg.local_window if kind == "local" else 0
+            )
+            Sc = min(window, cache_len) if window else cache_len
+            kk, vv = _kv_to_ring(k, v, Sc, dtype)
+            e["attn"] = {"k": kk, "v": vv, "t": jnp.asarray(S, jnp.int32)}
+        return e
+
+    new_stack = None
+    if layers["stack"] is not None:
+        new_stack = _convert_stacked(layers["stack"], pattern, cfg, cache_len, S, dtype)
+    new_tail = tuple(
+        convert_entry(layers["tail"][i], pattern[i % len(pattern)])
+        for i in range(len(layers["tail"]))
+    )
+    cache = {
+        "layers": {"stack": new_stack, "tail": new_tail},
+        "t": jnp.asarray(S, jnp.int32),
+    }
+    if "memory" in prefill_cache:
+        cache["memory"] = prefill_cache["memory"]
+    return cache
+
+
+def _convert_stacked(stack, pattern, cfg, cache_len, S, dtype):
+    out = []
+    for i, kind in enumerate(pattern):
+        entry = dict(stack[i])
+        if "kv_out" in entry:
+            k, v = entry.pop("kv_out")  # (n_groups, B, S, KV, Dh)
+            window = (
+                cfg.sliding_window
+                if kind == "swa"
+                else cfg.local_window if kind == "local" else 0
+            )
+            Sc = min(window, cache_len) if window else cache_len
+            kk, vv = jax.vmap(lambda a, b: _kv_to_ring(a, b, Sc, dtype))(k, v)
+            n = k.shape[0]
+            entry["attn"] = {
+                "k": kk,
+                "v": vv,
+                "t": jnp.full((n,), S, jnp.int32),
+            }
+        out.append(entry)
+    return tuple(out)

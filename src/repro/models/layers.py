@@ -1,0 +1,228 @@
+"""Model building blocks, pure JAX.
+
+The attention path is the jnp analogue of the paper's ATB: blocked
+online-softmax (FlashAttention-style) so scores never materialize in HBM —
+the paper's "nonlinear operators inserted into the MM dataflow" (C6) at the
+reference level.  The Pallas kernel in ``repro.kernels.flash_attention``
+implements the same block schedule for real TPUs; this file is its oracle
+and the path the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, d, 2, dtype=jnp.float32) / d
+    )  # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (jnp "flash"): the ATB reference path.
+# ---------------------------------------------------------------------------
+def _chunk_scores(qi, kj, softmax_scale):
+    # qi: (B, qc, KH, G, D); kj: (B, kc, KH, D) -> (B, KH, G, qc, kc)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32), kj.astype(jnp.float32))
+    return s * softmax_scale
+
+
+def _chunk_mask(q_off, k_off, qc, kc, causal: bool, window: int, prefix_len: int = 0):
+    iq = q_off + jnp.arange(qc)[:, None]
+    ik = k_off + jnp.arange(kc)[None, :]
+    m = jnp.ones((qc, kc), dtype=bool)
+    if causal:
+        c = iq >= ik
+        if prefix_len > 0:  # prefix-LM (PaliGemma): prefix attends bidirectionally
+            c |= ik < prefix_len
+        m &= c
+    if window > 0:
+        m &= (iq - ik) < window
+    return m
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+    softmax_scale: Optional[float] = None,
+    prefix_len: int = 0,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KH, D); GQA via H = KH * G.
+
+    Online softmax over k-chunks inside a scan over q-chunks: peak temp is
+    O(qc * kc) per head instead of O(Sq * Sk).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    # Pick chunk sizes that divide (shapes in this repo are powers of two or
+    # get padded by the caller).
+    while Sq % qc:
+        qc //= 2
+    while Sk % kc:
+        kc //= 2
+    nq, nk = Sq // qc, Sk // kc
+
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, KH, G, D), 1, 0)  # (nq, B, ...)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, KH, D), 1, 0)  # (nk, B, ...)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, KH, D), 1, 0)
+
+    def q_step(_, q_in):
+        qi, q_idx = q_in
+        q_off = q_idx * qc
+
+        def k_step(carry, k_in):
+            m_i, l_i, o_i = carry
+            kj, vj, k_idx = k_in
+            k_off = k_idx * kc
+            s = _chunk_scores(qi, kj, scale)  # (B, KH, G, qc, kc)
+            mask = _chunk_mask(q_off, k_off, qc, kc, causal, window, prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+            o_new = o_i * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        o0 = jnp.zeros((B, KH, G, qc, D), jnp.float32)
+        (m, l, o), _ = lax.scan(
+            k_step, (m0, l0, o0), (kr, vr, jnp.arange(nk))
+        )
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B, KH, G, qc, D) -> (B, qc, KH, G, D)
+        return None, jnp.transpose(o, (0, 3, 1, 2, 4))
+
+    _, out = lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    # out: (nq, B, qc, KH, G, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    window: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, S, KH, D); cur_len: () current filled length
+    (the new token sits at position cur_len - 1).
+    """
+    B, _, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qr.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(S)
+    valid = idx < cur_len
+    if window > 0:
+        valid &= idx >= (cur_len - window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    # Cross-shard-safe softmax: max/sum reduce over the (possibly sharded)
+    # cache axis; GSPMD inserts the small all-reduces (flash-decoding split-K).
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p / l, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def plain_cross_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Bidirectional cross-attention (decoder -> short encoder memory)."""
+    return blocked_attention(
+        q, k, v, causal=False, window=0, q_chunk=q_chunk, k_chunk=k.shape[1]
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation in ("swiglu", "geglu"):
+        h = x @ params["w1"]
+        g = x @ params["w3"]
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True)
+        )
+        h = act(h) * g
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ params["w1"], approximate=True)
+    else:
+        raise ValueError(f"mlp does not handle activation={activation!r}")
+    return h @ params["w2"]

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN stage.
+
+Two dispatch implementations, selected by the plan (and contrasted in
+EXPERIMENTS.md §Perf):
+
+* ``gshard``  — grouped one-hot einsum dispatch (GShard/Switch style).  SPMD-
+  clean under pjit: with experts sharded on the ``model`` axis the dispatch
+  einsums lower to all-to-alls.  Cost: the dispatch einsums burn real MXU
+  FLOPs (O(tokens * E * capacity_per_group * d) per layer).
+* ``sort``    — argsort-based token permutation into (E, C, d) buffers
+  (MegaBlocks-style dropping).  Gather/scatter moves bytes, not FLOPs, so the
+  useful-FLOPs ratio is much better; sharding is constrained explicitly.
+
+Expert placement follows the plan: ``ep``   experts sharded over ``model``
+(e.g. qwen3-moe 128e / 16 = 8 per chip); ``tp``   every expert's d_ff sharded
+over ``model`` (e.g. mixtral 8e < 16 chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 1024  # gshard dispatch group (tokens)
+    dispatch: str = "gshard"  # gshard | sort
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, top_k: int):
+    """x: (T, d) -> (gates (T,k) fp32, idx (T,k) int32, aux load-balance loss)."""
+    logits = (x.astype(jnp.float32)) @ w_router.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss.
+    E = w_router.shape[-1]
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / idx.size
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _expert_ffn(params: dict, xe: jax.Array, activation: str) -> jax.Array:
+    """xe: (E, C, d) -> (E, C, d), batched over experts."""
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w1"])
+    if activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", xe, params["w3"])
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True)
+        )
+        h = act(h) * g
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, params["w2"])
+
+
+# ---------------------------------------------------------------------------
+# GShard grouped-einsum dispatch
+# ---------------------------------------------------------------------------
+def moe_gshard(params: dict, x: jax.Array, st: MoESettings, activation: str):
+    """x: (T, d). Groups of g tokens dispatch independently (bounds the
+    one-hot size and the einsum FLOPs)."""
+    T, d = x.shape
+    E, K = st.n_experts, st.top_k
+    g = min(st.group_size, T)
+    while T % g:
+        g //= 2
+    G = T // g
+    cap = max(1, int(g * K * st.capacity_factor / E))
+
+    gates, idx, aux = router_topk(x, params["router"], K)
+    xg = x.reshape(G, g, d)
+    idxg = idx.reshape(G, g, K)
+    gatesg = gates.reshape(G, g, K)
+
+    # Position of each (token, k) within its expert queue, per group.
+    onehot_e = jax.nn.one_hot(idxg, E, dtype=jnp.float32)  # (G, g, K, E)
+    flat = onehot_e.reshape(G, g * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)
+    pos_k = jnp.take_along_axis(pos, idxg[..., None].astype(jnp.int32), axis=-1)
+    pos_k = pos_k.squeeze(-1)  # (G, g, K): queue rank of each (token, k)
+    in_cap = pos_k < cap
+    onehot_c = jax.nn.one_hot(pos_k.astype(jnp.int32), cap, dtype=jnp.float32)
+    onehot_c = onehot_c * in_cap[..., None]
+    # combine[g,s,e,c] = gate of token s if it landed in (expert e, slot c).
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c, gatesg)
+    dispatch = (combine > 0).astype(x.dtype)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (G, E, C, d)
+    xe = xe.transpose(1, 0, 2, 3).reshape(E, G * cap, d)
+    ye = _expert_ffn(params, xe, activation)
+    ye = ye.reshape(E, G, cap, d).transpose(1, 0, 2, 3)  # (G, E, C, d)
+    out = jnp.einsum(
+        "gsec,gecd->gsd", combine, ye.astype(jnp.float32)
+    )
+    return out.reshape(T, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch (optimized path)
+# ---------------------------------------------------------------------------
+def moe_sort(params: dict, x: jax.Array, st: MoESettings, activation: str):
+    T, d = x.shape
+    E, K = st.n_experts, st.top_k
+    N = T * K
+    C = max(1, int(T * K * st.capacity_factor / E))
+
+    gates, idx, aux = router_topk(x, params["router"], K)
+    flat_e = idx.reshape(N)
+    flat_gate = gates.reshape(N)
+    order = jnp.argsort(flat_e, stable=True)  # (N,)
+    sorted_e = flat_e[order]
+    # rank within expert = position - first index of that expert value
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(N) - first
+    valid = rank < C
+    slot = jnp.where(valid, sorted_e * C + rank, E * C)  # E*C = drop bin
+    token_of = order // K
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[token_of], mode="drop")
+    ye = _expert_ffn(params, buf[:-1].reshape(E, C, d), activation)
+    y_flat = jnp.concatenate([ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)])
+    contrib = y_flat[slot].astype(jnp.float32) * (
+        flat_gate[order] * valid
+    )[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[token_of].add(contrib)
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(
+    params: dict,
+    x: jax.Array,
+    st: MoESettings,
+    activation: str,
+):
+    """x: (..., d) -> (..., d), plus the aux loss (fp32 scalar)."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    fn = moe_sort if st.dispatch == "sort" else moe_gshard
+    y, aux = fn(params, xf, st, activation)
+    return y.reshape(shape), aux

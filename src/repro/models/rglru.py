@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Structure per block (the "ATB" of the recurrent layers — DESIGN.md §5):
+    branch a: x -> W_x -> causal depthwise conv1d(width 4) -> RG-LRU
+    branch b: x -> W_g -> GeLU
+    out     : (a * b) @ W_out
+
+RG-LRU recurrence (per channel, block-diagonal input/recurrence gates):
+    r_t = sigmoid(gate_r(u_t));  i_t = sigmoid(gate_i(u_t))
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses an associative scan over (a_t, b_t) pairs — O(S log S) depth;
+decode is the single-step update.  ``rglru_scan_ref`` (plain lax.scan) is the
+oracle used by the property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_C = 8.0
+
+
+def _block_gate(u: jax.Array, w: jax.Array, b: jax.Array, n_heads: int) -> jax.Array:
+    """Block-diagonal linear gate: u (..., W) with (heads, W/h, W/h) weights."""
+    shape = u.shape
+    uh = u.reshape(*shape[:-1], n_heads, shape[-1] // n_heads)
+    y = jnp.einsum("...hi,hij->...hj", uh, w) + b.reshape(n_heads, -1)
+    return y.reshape(shape)
+
+
+def _gates(params: dict, u: jax.Array, n_heads: int):
+    r = jax.nn.sigmoid(_block_gate(u, params["w_gate_a"], params["b_gate_a"], n_heads))
+    i = jax.nn.sigmoid(_block_gate(u, params["w_gate_x"], params["b_gate_x"], n_heads))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (..., W), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru(params: dict, u: jax.Array, n_heads: int, h0=None) -> tuple[jax.Array, jax.Array]:
+    """u: (B, S, W) fp32-upcast inside; returns (y (B,S,W), h_last (B,W))."""
+    dt = u.dtype
+    a, b = _gates(params, u.astype(jnp.float32), n_heads)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(dt), h[:, -1].astype(jnp.float32)
+
+
+def rglru_scan_ref(params: dict, u: jax.Array, n_heads: int, h0=None):
+    """Sequential oracle for the associative-scan implementation."""
+    a, b = _gates(params, u.astype(jnp.float32), n_heads)
+    h0 = jnp.zeros_like(u[:, 0], dtype=jnp.float32) if h0 is None else h0
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, hs = lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(u.dtype), hs[-1]
+
+
+def rglru_decode_step(params: dict, u1: jax.Array, h: jax.Array, n_heads: int):
+    """u1: (B, W) one step; h: (B, W) carried state."""
+    a, b = _gates(params, u1.astype(jnp.float32), n_heads)
+    h_new = a * h + b
+    return h_new.astype(u1.dtype), h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv. x: (B, S, W); w: (cw, W); state: (B, cw-1, W)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(cw)
+    )
+    new_state = xp[:, -(cw - 1) :] if cw > 1 else None
+    return out, new_state
+
+
+def rglru_block(params: dict, x: jax.Array, *, n_heads: int, cache=None,
+                collect: bool = False):
+    """The full recurrent block. x: (B, S, d). cache: {"h", "conv"} or None.
+
+    ``collect=True`` harvests the final recurrent + conv state from a parallel
+    (prefill) pass.  Returns (y (B,S,d), new_cache)."""
+    u = x @ params["w_x"]
+    g = jax.nn.gelu(x @ params["w_g"], approximate=True)
+    conv_state = None if cache is None else cache["conv"]
+    u, new_conv = causal_conv1d(u, params["conv_w"], conv_state)
+    if cache is None:
+        h, h_last = rglru(params, u, n_heads)
+    else:
+        # decode: S == 1
+        h1, h_last = rglru_decode_step(params, u[:, 0], cache["h"], n_heads)
+        h = h1[:, None]
+    y = (h * g) @ params["w_out"]
+    new_cache = None
+    if cache is not None or collect:
+        new_cache = {"h": h_last, "conv": new_conv}
+    return y, new_cache

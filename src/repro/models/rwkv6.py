@@ -1,0 +1,197 @@
+"""RWKV-6 "Finch" time-mix (arXiv:2404.05892) — data-dependent decay WKV.
+
+Per head (d_k = d_v = d_head), with decay w_t in (0,1) per channel and bonus u:
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Three implementations:
+  * ``wkv_scan_ref``  — sequential lax.scan oracle (tests).
+  * ``wkv_chunked``   — chunked parallel form (intra-chunk masked matmuls in
+    log-decay space + inter-chunk state carry).  This is the jnp reference of
+    the Pallas kernel in ``repro.kernels.rwkv6`` and the path the model uses.
+  * decode step       — single-token state update.
+
+The projections (r, k, v, g, decay-lora) use token-shift mixing; the
+channel-mix half of RWKV lives in ``transformer.py`` (relu^2 MLP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+def wkv_scan_ref(r, k, v, w, u):
+    """Sequential oracle.
+    r/k/v: (B, S, H, D); w: (B, S, H, D) decay in (0,1); u: (H, D) bonus.
+    Returns (B, S, H, D)."""
+    B, S, H, D = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S_state, xs):
+        rt, kt, vt, wt = xs  # (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+        out = jnp.einsum(
+            "bhk,bhkd->bhd", rt, S_state + u[None, :, :, None] * kv
+        )
+        S_new = wt[..., :, None] * S_state + kv
+        return S_new, out
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    _, outs = lax.scan(step, S0, xs)
+    return outs.swapaxes(0, 1)
+
+
+def wkv_chunked(r, k, v, w, u, chunk: int = 32, state=None, return_state=False):
+    """Chunked parallel WKV.  Same signature/semantics as the oracle.
+
+    Within a chunk (length c), with L_t = sum_{m<=t} log w_m (per channel):
+      intra: o_t += sum_{j<t} (r_t * exp(L_{t-1} - L_j))^T ... realized as a
+             masked (c x c) matmul over D with decay-ratio weights
+      bonus: o_t += (r_t * u)^T k_t v_t            (the j = t term)
+      cross: o_t += (r_t * exp(L_{t-1} - L_0-)) @ S_prev
+      carry: S = diag(exp(L_c)) S_prev + sum_j (k_j exp(L_c - L_j)) v_j^T
+    """
+    B, S, H, D = r.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    N = S // c
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    logw = jnp.log(jnp.maximum(w, 1e-12)).reshape(B, N, c, H, D)
+    rr = r.reshape(B, N, c, H, D)
+    kk = k.reshape(B, N, c, H, D)
+    vv = v.reshape(B, N, c, H, D)
+
+    L = jnp.cumsum(logw, axis=2)  # inclusive cumulative log decay
+    Lc = L[:, :, -1]  # (B, N, H, D) total chunk decay
+    # decay from position j (exclusive) to chunk end / to position t-1:
+    # exp(L_{t-1} - L_j) for j < t  ==  exp((L_t - logw_t) - L_j)
+    Lq = L - logw  # L_{t-1}: decay accumulated before t
+
+    def chunk_step(S_state, xs):
+        Li, Lqi, Lci, ri, ki, vi, lwi = xs
+        # ri etc: (B, c, H, D); S_state: (B, H, D, D)
+        # Intra-chunk decay ratio exp(L_{t-1} - L_j), j < t: the exponent is
+        # <= 0 wherever the mask is true, so this form never overflows
+        # (the factored exp(L)*exp(-L) form does for strong decays).
+        delta = Lqi[:, :, None] - Li[:, None]  # (B, t, s, H, D)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        delta = jnp.where(mask[None, :, :, None, None], delta, -jnp.inf)
+        att = jnp.einsum("bthd,bshd,btshd->bhts", ri, ki, jnp.exp(delta))
+        o = jnp.einsum("bhts,bshd->bthd", att, vi)
+        rdec = ri * jnp.exp(Lqi)  # r_t * exp(L_{t-1}), exponent <= 0
+        # bonus (diagonal) term
+        o += jnp.einsum("bthd,bthd,bthe->bthe", ri * u[None, None], ki, vi)
+        # cross-chunk: state contribution
+        o += jnp.einsum("bthk,bhkd->bthd", rdec, S_state)
+        # state update
+        kfut = ki * jnp.exp(Lci[:, None] - Li)  # decay from j to chunk end
+        S_new = jnp.exp(Lci)[..., None] * S_state + jnp.einsum(
+            "bshk,bshd->bhkd", kfut, vi
+        )
+        return S_new, o
+
+    S0 = (
+        jnp.zeros((B, H, D, D), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+    xs = tuple(
+        t.swapaxes(0, 1)
+        for t in (L, Lq, Lc, rr, kk, vv, logw.reshape(B, N, c, H, D))
+    )
+    S_last, outs = lax.scan(chunk_step, S0, xs)
+    out = outs.swapaxes(0, 1).reshape(B, S, H, D)
+    if return_state:
+        return out, S_last
+    return out
+
+
+def wkv_decode_step(r1, k1, v1, w1, u, S_state):
+    """One token. r1/k1/v1/w1: (B, H, D); S_state: (B, H, D, D)."""
+    r1, k1, v1, w1 = (t.astype(jnp.float32) for t in (r1, k1, v1, w1))
+    kv = k1[..., :, None] * v1[..., None, :]
+    out = jnp.einsum("bhk,bhkd->bhd", r1, S_state + u[None, :, :, None].astype(jnp.float32) * kv)
+    S_new = w1[..., :, None] * S_state + kv
+    return out, S_new
+
+
+# ---------------------------------------------------------------------------
+# Full time-mix block
+# ---------------------------------------------------------------------------
+def _token_shift(x, mix, x_prev=None):
+    """lerp(x, shift(x), mix). x: (B, S, d); x_prev: (B, d) decode state."""
+    if x_prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    return x + (shifted - x) * mix.astype(x.dtype)
+
+
+def rwkv6_time_mix(params: dict, x: jax.Array, *, n_heads: int, d_head: int,
+                   cache=None, chunk: int = 32, collect: bool = False):
+    """x: (B, S, d). cache: {"S": (B,H,D,D), "shift": (B,d)} or None.
+    Returns (y (B,S,d), new_cache)."""
+    B, S, d = x.shape
+    H, D = n_heads, d_head
+    shift_state = None if cache is None else cache["shift"]
+
+    xr = _token_shift(x, params["mix_r"], shift_state)
+    xk = _token_shift(x, params["mix_k"], shift_state)
+    xv = _token_shift(x, params["mix_v"], shift_state)
+    xg = _token_shift(x, params["mix_g"], shift_state)
+    xw = _token_shift(x, params["mix_w"], shift_state)
+
+    r = (xr @ params["w_r"]).reshape(B, S, H, D)
+    k = (xk @ params["w_k"]).reshape(B, S, H, D)
+    v = (xv @ params["w_v"]).reshape(B, S, H, D)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay via low-rank adapter (Finch):
+    dw = jnp.tanh(xw.astype(jnp.float32) @ params["lora_a"]) @ params["lora_b"]
+    logit = params["w0"].astype(jnp.float32) + dw  # (B, S, H*D)
+    w = jnp.exp(-jnp.exp(logit)).reshape(B, S, H, D)  # in (0, 1)
+
+    if cache is None:
+        if collect:
+            o, S_last = wkv_chunked(r, k, v, w, params["u"], chunk=chunk,
+                                    return_state=True)
+            new_cache = {"S": S_last, "shift": x[:, -1].astype(jnp.float32)}
+        else:
+            o = wkv_chunked(r, k, v, w, params["u"], chunk=chunk)
+            new_cache = None
+    else:
+        o1, S_new = wkv_decode_step(
+            r[:, 0], k[:, 0], v[:, 0], w[:, 0], params["u"], cache["S"]
+        )
+        o = o1[:, None]
+        new_cache = {"S": S_new, "shift": x[:, -1].astype(jnp.float32)}
+
+    # per-head groupnorm on the wkv output (RWKV6 uses GN over heads)
+    o = o.reshape(B, S, H, D)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1)[..., None]
+    o = (o - mu) * lax.rsqrt(var + 1e-5)
+    o = o * params["gn_scale"].reshape(H, D) + params["gn_bias"].reshape(H, D)
+    o = o.reshape(B, S, H * D).astype(x.dtype) * g.astype(x.dtype)
+    return o @ params["w_o"], new_cache
+
+
+def rwkv6_channel_mix(params: dict, x: jax.Array, cache=None, collect: bool = False):
+    """RWKV channel-mix: relu(xk @ Wk)^2 @ Wv gated by sigmoid(xr @ Wr)."""
+    shift_state = None if cache is None else cache
+    xk = _token_shift(x, params["mix_k"], shift_state)
+    xr = _token_shift(x, params["mix_r"], shift_state)
+    h = jnp.square(jax.nn.relu(xk @ params["w1"]))
+    y = jax.nn.sigmoid(xr @ params["w_r"]) * (h @ params["w2"])
+    new_cache = (
+        x[:, -1].astype(jnp.float32) if (cache is not None or collect) else None
+    )
+    return y, new_cache

@@ -1,0 +1,448 @@
+"""EDPU — the Encoder/Decoder Processing Unit (paper §III.B) in JAX.
+
+One ``edpu_layer`` call = one Transformer layer = MHA Stage then FFN Stage,
+serially, sharing the same chips (the paper's two-stage resource-sharing
+design).  Layers are stacked as scanned pattern-groups so heterogeneous
+patterns (e.g. RecurrentGemma's rglru/rglru/local) stay scannable.
+
+Everything is a pure function of (params, batch) with the ExecutionPlan as
+static configuration — the plan is where the CAT customization (fused QKV,
+chunk sizes, remat, MoE dispatch) enters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import ExecutionPlan
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as G
+from repro.models import rwkv6 as R
+
+PyTree = Any
+Identity = lambda x, name=None: x
+
+
+# ---------------------------------------------------------------------------
+# Attention stage (the ATB + LBs)
+# ---------------------------------------------------------------------------
+def _project_qkv(ap: dict, h: jax.Array, cfg: ArchConfig, plan: ExecutionPlan):
+    B, S, _ = h.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if plan.fuse_qkv and "wqkv" in ap:
+        qkv = h @ ap["wqkv"]  # C5: one large MM instead of 3 narrow ones
+        q, k, v = jnp.split(qkv, [H * Dh, (H + KV) * Dh], axis=-1)
+    else:
+        q, k, v = h @ ap["wq"], h @ ap["wk"], h @ ap["wv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KV, Dh)
+    v = v.reshape(B, S, KV, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, ap["q_norm"])
+        k = L.rmsnorm(k, ap["k_norm"])
+    return q, k, v
+
+
+def attention_stage(
+    ap: dict,
+    h: jax.Array,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    kind: str,
+    positions: jax.Array,
+    cache: Optional[dict],
+    prefix_len: int,
+    shard: Callable = Identity,
+):
+    B, S, _ = h.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    window = (
+        cfg.sliding_window
+        if kind == "swa"
+        else cfg.local_window if kind == "local" else 0
+    )
+    q, k, v = _project_qkv(ap, h, cfg, plan)
+    if cfg.pos_embedding == "rope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q, k, v = shard(q, "act_heads"), shard(k, "act_kv"), shard(v, "act_kv")
+
+    new_cache = None
+    if cache is None:
+        o = L.blocked_attention(
+            q, k, v,
+            causal=cfg.causal,
+            window=window,
+            q_chunk=plan.mha.pu.block_m,
+            k_chunk=plan.mha.pu.block_n,
+            prefix_len=prefix_len,
+        )
+        kv_out = (k, v)
+    else:
+        Sc = cache["k"].shape[1]
+        t = cache["t"]  # filled length before this token
+        idx = t % Sc if window else jnp.minimum(t, Sc - 1)
+        k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        eff_len = jnp.minimum(t + 1, Sc)
+        o = L.decode_attention(q, k_cache, v_cache, eff_len, window=0)
+        new_cache = {"k": k_cache, "v": v_cache, "t": t + 1}
+        kv_out = None
+    out = shard(o.reshape(B, S, H * Dh), "act_heads_flat") @ ap["wo"]
+    return out, new_cache, kv_out
+
+
+def cross_attention_stage(cp: dict, h: jax.Array, memory_kv, cfg: ArchConfig):
+    """Decoder -> encoder-memory attention (whisper). memory_kv: (k, v)."""
+    B, S, _ = h.shape
+    q = (h @ cp["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    mk, mv = memory_kv
+    o = L.plain_cross_attention(q, mk, mv)
+    return o.reshape(B, S, cfg.n_heads * cfg.d_head) @ cp["wo"]
+
+
+def cross_kv(cp: dict, memory: jax.Array, cfg: ArchConfig):
+    B, Se, _ = memory.shape
+    mk = (memory @ cp["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+    mv = (memory @ cp["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.d_head)
+    return mk, mv
+
+
+# ---------------------------------------------------------------------------
+# The EDPU layer
+# ---------------------------------------------------------------------------
+def edpu_layer(
+    lp: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    kind: str,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    memory: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    causal_override: Optional[bool] = None,
+    collect: bool = False,
+    shard: Callable = Identity,
+):
+    """One Encoder/Decoder layer: MHA Stage -> (cross) -> FFN Stage.
+
+    ``collect=True`` (prefill) harvests decode-cache state from the parallel
+    pass; the train path keeps it False so no KV leaves the layer scan.
+    Returns (x, new_cache, aux_loss)."""
+    run_cfg = cfg
+    if causal_override is not None:
+        import dataclasses
+
+        run_cfg = dataclasses.replace(cfg, causal=causal_override)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    # ---- MHA Stage ---------------------------------------------------------
+    h = L.apply_norm(lp["attn"]["ln"], x, cfg.norm)
+    if kind in ("attn", "swa", "local"):
+        a, nc, kv_out = attention_stage(
+            lp["attn"], h,
+            cfg=run_cfg, plan=plan, kind=kind, positions=positions,
+            cache=None if cache is None else cache.get("attn"),
+            prefix_len=prefix_len, shard=shard,
+        )
+        if nc is not None:
+            new_cache["attn"] = nc
+        if cache is None and collect and kv_out is not None:
+            new_cache["kv_out"] = kv_out  # harvested by prefill
+    elif kind == "rglru":
+        a, nc = G.rglru_block(
+            lp["attn"], h,
+            n_heads=max(cfg.rnn_heads, 1),
+            cache=None if cache is None else cache.get("rglru"),
+            collect=collect,
+        )
+        if nc is not None:
+            new_cache["rglru"] = nc
+    elif kind == "rwkv6":
+        a, nc = R.rwkv6_time_mix(
+            lp["attn"], h,
+            n_heads=cfg.rnn_heads, d_head=cfg.d_head,
+            cache=None if cache is None else cache.get("rwkv"),
+            collect=collect,
+        )
+        if nc is not None:
+            new_cache["rwkv"] = nc
+    else:
+        raise ValueError(kind)
+    x = shard(x + a, "act_hidden")
+
+    # ---- Cross-attention sub-stage (enc-dec decoder only) -------------------
+    if "cross" in lp:
+        hc = L.apply_norm(lp["cross"]["ln"], x, cfg.norm)
+        if cache is not None and "cross_kv" in cache:
+            mkv = cache["cross_kv"]
+        else:
+            mkv = cross_kv(lp["cross"], memory, cfg)
+        x = x + cross_attention_stage(lp["cross"], hc, mkv, cfg)
+        if cache is not None or collect:
+            new_cache["cross_kv"] = mkv
+
+    # ---- FFN Stage ----------------------------------------------------------
+    h2 = L.apply_norm(lp["ffn"]["ln"], x, cfg.norm)
+    if cfg.is_moe:
+        st = M.MoESettings(
+            n_experts=cfg.n_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.moe_capacity_factor,
+            dispatch=plan.moe_dispatch,
+        )
+        f, aux = M.moe_ffn(lp["ffn"], h2, st, cfg.activation)
+    elif kind == "rwkv6":
+        f, nc = R.rwkv6_channel_mix(
+            lp["ffn"], h2,
+            cache=None if cache is None else cache.get("cmix"),
+            collect=collect,
+        )
+        if nc is not None:
+            new_cache["cmix"] = nc
+    else:
+        f = L.mlp(lp["ffn"], h2, cfg.activation)
+    x = shard(x + f, "act_hidden")
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def _run_stack(
+    blocks: dict,
+    x: jax.Array,
+    layer_fn: Callable,
+    pattern: tuple[str, ...],
+    caches: Optional[dict] = None,
+    remat: bool = False,
+):
+    """Scan the stacked pattern-groups, then the tail layers.
+
+    layer_fn(lp, x, kind, cache) -> (x, new_cache, aux).
+    caches mirrors blocks: {"stack": ..., "tail": ...} or None.
+    Returns (x, new_caches, total_aux)."""
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        no_cache = gcache is None or hasattr(gcache, "ndim")  # scan dummy
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            c = None if no_cache else gcache[i]
+            x, nc, a = layer_fn(gp[i], x, kind, c)
+            new_caches.append(nc)
+            aux += a
+        return x, (tuple(new_caches), aux)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    new_stack = None
+    total_aux = jnp.zeros((), jnp.float32)
+    if blocks["stack"] is not None:
+        stack_caches = None if caches is None else caches["stack"]
+        if stack_caches is None:
+            n = jax.tree.leaves(blocks["stack"])[0].shape[0]
+            stack_caches = None
+            xs = (blocks["stack"], _nones_like_scan(blocks["stack"]))
+        else:
+            xs = (blocks["stack"], stack_caches)
+        x, (new_stack, auxes) = lax.scan(body, x, xs)
+        total_aux += auxes.sum()
+    new_tail = []
+    for i, lp in enumerate(blocks["tail"]):
+        kind = pattern[i % len(pattern)]
+        c = None if caches is None else caches["tail"][i]
+        x, nc, a = layer_fn(lp, x, kind, c)
+        new_tail.append(nc)
+        total_aux += a
+    return x, {"stack": new_stack, "tail": tuple(new_tail)}, total_aux
+
+
+def _nones_like_scan(tree):
+    """A scan-compatible 'no cache' placeholder: broadcast None via a dummy."""
+    n = jax.tree.leaves(tree)[0].shape[0]
+    return jnp.zeros((n, 0))  # zero-width array; treated as falsy cache
+
+
+def _weight_dtype(params: PyTree):
+    """Compute dtype = dtype of the (>=2-D) weight leaves (norms stay fp32)."""
+    for leaf in jax.tree.leaves(params):
+        if getattr(leaf, "ndim", 0) >= 2:
+            return leaf.dtype
+    return jnp.bfloat16
+
+
+def forward(
+    params: PyTree,
+    batch: dict,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    cache: Optional[PyTree] = None,
+    collect_cache: bool = False,
+    shard: Callable = Identity,
+):
+    """Full model forward.
+
+    batch keys (by arch): "tokens" (B,S) int32; optional "prefix_embeds"
+    (B,P,d); enc-dec: "enc_embeds" (B,Se,d).  With ``cache`` set, runs one
+    decode step (S == 1).  Returns (hidden (B,S,d), new_cache, aux).
+    """
+    dtype = _weight_dtype(params)
+    x_parts = []
+    prefix_len = 0
+    if "prefix_embeds" in batch:
+        x_parts.append(batch["prefix_embeds"].astype(dtype))
+        prefix_len = batch["prefix_embeds"].shape[1]
+    if "tokens" in batch and "embed" in params:
+        emb = params["embed"].astype(dtype)[batch["tokens"]]
+        if cfg.activation == "geglu":  # gemma family scales embeddings
+            emb = emb * jnp.asarray(cfg.d_model**0.5, dtype)
+        x_parts.append(emb)
+    x = x_parts[0] if len(x_parts) == 1 else jnp.concatenate(x_parts, axis=1)
+    B, S, _ = x.shape
+
+    t0 = 0 if cache is None else cache["t"]
+    positions = t0 + jnp.arange(S)[None, :]
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos"].astype(dtype)[None, :S] if cache is None else (
+            x + lax.dynamic_slice_in_dim(params["pos"].astype(dtype), t0, 1)[None]
+        )
+    elif cfg.pos_embedding == "sinusoidal":
+        pos = L.sinusoidal_positions(S, cfg.d_model).astype(dtype)
+        if cache is None:
+            x = x + pos[None]
+        else:
+            x = x + lax.dynamic_slice_in_dim(
+                L.sinusoidal_positions(cfg.max_seq_len, cfg.d_model).astype(dtype),
+                t0, 1)[None]
+    x = shard(x, "act_hidden")
+
+    # ---- encoder (enc-dec archs) -------------------------------------------
+    memory = None
+    if cfg.enc_dec:
+        if cache is not None and "memory" in cache:
+            memory = cache["memory"]
+        else:
+            enc = batch["enc_embeds"].astype(dtype)
+            enc = enc + L.sinusoidal_positions(enc.shape[1], cfg.d_model).astype(dtype)[None]
+            enc_positions = jnp.arange(enc.shape[1])[None, :]
+
+            def enc_layer_fn(lp, xx, kind, c):
+                return edpu_layer(
+                    lp, xx, cfg=cfg, plan=plan, kind=kind,
+                    positions=enc_positions, cache=None, prefix_len=0,
+                    causal_override=False, shard=shard,
+                )
+
+            enc, _, _ = _run_stack(
+                params["encoder"], enc, enc_layer_fn, ("attn",), None, plan.remat
+            )
+            memory = L.apply_norm(params["encoder"]["final_norm"], enc, cfg.norm)
+
+    # ---- decoder / main stack ------------------------------------------------
+    def layer_fn(lp, xx, kind, c):
+        c = None if (c is None or (hasattr(c, "ndim"))) else c  # scan dummy
+        return edpu_layer(
+            lp, xx, cfg=cfg, plan=plan, kind=kind, positions=positions,
+            cache=c, memory=memory, prefix_len=prefix_len,
+            causal_override=False if cfg.encoder_only else None,
+            collect=collect_cache, shard=shard,
+        )
+
+    layer_caches = None if cache is None else cache["layers"]
+    x, new_layer_caches, aux = _run_stack(
+        params["blocks"], x, layer_fn, cfg.layer_pattern, layer_caches, plan.remat
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["t"] = cache["t"] + S
+    elif collect_cache:
+        new_cache = {"layers": new_layer_caches, "t": S}
+        if memory is not None:
+            new_cache["memory"] = memory
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Heads + losses
+# ---------------------------------------------------------------------------
+def logits_fn(params: PyTree, x: jax.Array, cfg: ArchConfig):
+    if cfg.n_classes:
+        return x.mean(axis=1) @ params["cls_head"]
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    return x @ w
+
+
+def chunked_softmax_xent(
+    x: jax.Array,
+    w: jax.Array,
+    targets: jax.Array,
+    loss_mask: Optional[jax.Array] = None,
+    chunk: int = 512,
+):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    x: (B,S,d); w: (d,V); targets: (B,S) int32. Returns (sum_loss, n_tokens)."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    N = S // c
+    xr = x.reshape(B, N, c, d).swapaxes(0, 1)
+    tr = targets.reshape(B, N, c).swapaxes(0, 1)
+    if loss_mask is None:
+        mr = jnp.ones((N, B, c), jnp.float32)
+    else:
+        mr = loss_mask.reshape(B, N, c).swapaxes(0, 1).astype(jnp.float32)
+
+    # checkpoint: without it the scan saves every chunk's (B, c, V) logits
+    # for the backward pass — 40 GB/chip at a 152k vocab.  Recompute instead.
+    @jax.checkpoint
+    def step(acc, inp):
+        xc, tc, mc = inp
+        logits = (xc @ w).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss = (lse - tl) * mc
+        return (acc[0] + loss.sum(), acc[1] + mc.sum()), None
+
+    (total, n), _ = lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (xr, tr, mr))
+    return total, jnp.maximum(n, 1.0)
+
+
+def lm_loss(params: PyTree, batch: dict, *, cfg: ArchConfig, plan: ExecutionPlan,
+            shard: Callable = Identity):
+    x, _, aux = forward(params, batch, cfg=cfg, plan=plan, shard=shard)
+    if cfg.n_classes:  # classifier head (ViT)
+        logits = logits_fn(params, x, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, batch["label"][:, None], axis=-1)[:, 0]
+        return (lse - tl).mean() + 0.01 * aux
+    w = params.get("lm_head", None)
+    if w is None:
+        w = params["embed"].T.astype(x.dtype)
+    targets = batch["targets"]
+    prefix = batch.get("prefix_embeds")
+    if prefix is not None:
+        # loss only over the text positions (prefix carries no targets)
+        P = prefix.shape[1]
+        x = x[:, P:]
+    total, n = chunked_softmax_xent(x, w, targets, batch.get("loss_mask"))
+    return total / n + 0.01 * aux

@@ -1,0 +1,65 @@
+"""Serving: prefill + batched decode.
+
+``make_prefill_step`` runs the parallel forward with cache collection and
+returns last-position logits (what a server samples from); ``make_decode_step``
+advances one token for the whole batch against the cache.  The dry-run lowers
+these for the decode_32k / long_500k / prefill_32k cells.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import ExecutionPlan
+from repro.models.cache import cache_from_prefill, init_cache
+from repro.models.transformer import forward, logits_fn
+
+PyTree = Any
+Identity = lambda x, name=None: x
+
+
+def make_prefill_step(cfg: ArchConfig, plan: ExecutionPlan, shard: Callable = Identity):
+    def prefill_step(params, batch):
+        x, pc, _ = forward(
+            params, batch, cfg=cfg, plan=plan, collect_cache=True, shard=shard
+        )
+        logits = logits_fn(params, x[:, -1:], cfg)
+        return logits, pc
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, plan: ExecutionPlan, shard: Callable = Identity):
+    def decode_step(params, token, cache):
+        x, new_cache, _ = forward(
+            params, {"tokens": token}, cfg=cfg, plan=plan, cache=cache, shard=shard
+        )
+        logits = logits_fn(params, x, cfg)
+        return logits, new_cache
+
+    return decode_step
+
+
+def greedy_generate(
+    params: PyTree,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    batch: dict,
+    n_steps: int,
+    cache_len: int,
+):
+    """Eager helper for the examples/tests (prefill then greedy decode)."""
+    prefill = make_prefill_step(cfg, plan)
+    decode = jax.jit(make_decode_step(cfg, plan))
+    logits, pc = prefill(params, batch)
+    cache = cache_from_prefill(cfg, plan, pc, cache_len)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [tok]
+    for _ in range(n_steps - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

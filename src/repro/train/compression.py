@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback.
+
+At 1000+ node scale the gradient all-reduce over the ``data``/``pod`` axes is
+the exposure window for stragglers; compressing it shrinks that window.
+Under automatic SPMD the all-reduce lives inside the backward pass, so the
+compression point we control is the *accumulation/exchange dtype*: gradients
+are quantized (bf16 or int8 + per-leaf scale) before they cross microbatch /
+replica boundaries, with an fp32 error-feedback residual carried in the
+train state so the quantization noise is unbiased over steps.
+
+``quantize``/``dequantize`` are also used by the shard_map manual-collective
+data-parallel path (``repro.dist.collectives.compressed_psum``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"  # none | bf16 | int8
+    error_feedback: bool = True
+
+
+def quantize(g: jax.Array, mode: str):
+    if mode == "bf16":
+        return g.astype(jnp.bfloat16), None
+    if mode == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    return g, None
+
+
+def dequantize(q: jax.Array, scale, mode: str) -> jax.Array:
+    if mode == "bf16":
+        return q.astype(jnp.float32)
+    if mode == "int8":
+        return q.astype(jnp.float32) * scale
+    return q
+
+
+def init_residual(grads_shape: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)
+
+
+def compress_grads(
+    grads: PyTree, residual: PyTree, cc: CompressionConfig
+) -> tuple[PyTree, PyTree]:
+    """Quantize+dequantize each grad leaf (the wire format), carrying the
+    quantization error into the next step's residual (error feedback)."""
+    if cc.mode == "none":
+        return grads, residual
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    new_g, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize(g32, cc.mode)
+        deq = dequantize(q, scale, cc.mode)
+        new_r.append((g32 - deq) if cc.error_feedback else jnp.zeros_like(g32))
+        new_g.append(deq.astype(g.dtype))
+    return jax.tree.unflatten(treedef, new_g), jax.tree.unflatten(treedef, new_r)

@@ -1,0 +1,103 @@
+"""AdamW + cosine schedule + global-norm clipping, from scratch.
+
+State layout keeps m/v in fp32 with the same shardings as the params
+(optimizer state shards with the weights — ZeRO-1 comes free from the
+weight sharding the plan already chose).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class TrainState(NamedTuple):
+    step: jax.Array  # () int32
+    params: PyTree
+    m: PyTree  # fp32 first moment
+    v: PyTree  # fp32 second moment
+    residual: PyTree = None  # fp32 error-feedback residual (grad compression)
+
+
+def init_state(params: PyTree, with_residual: bool = False) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        residual=jax.tree.map(zeros, params) if with_residual else None,
+    )
+
+
+def lr_at(opt: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = opt.peak_lr * step / max(opt.warmup_steps, 1)
+    frac = jnp.clip(
+        (step - opt.warmup_steps) / max(opt.total_steps - opt.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = opt.min_lr + 0.5 * (opt.peak_lr - opt.min_lr) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    state: TrainState, grads: PyTree, opt: OptimizerConfig
+) -> tuple[TrainState, dict]:
+    if opt.clip_norm > 0:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, opt.clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        gnorm = jnp.zeros(())
+        scale = jnp.ones(())
+    step = state.step + 1
+    lr = lr_at(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + opt.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return TrainState(step, new_params, new_m, new_v, state.residual), metrics

@@ -1,0 +1,68 @@
+"""Checkpoint: roundtrip, atomic manifests, resume, elastic restore."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": {"w": jax.random.normal(k1, (8, 16), jnp.float32)},
+        "b": (jax.random.normal(k2, (4,), jnp.bfloat16), jnp.int32(7)),
+    }
+
+
+def test_roundtrip(tmp_path, key):
+    t = _tree(key)
+    save_checkpoint(str(tmp_path), 10, t)
+    got = restore_checkpoint(str(tmp_path), 10, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_step_ignores_incomplete(tmp_path, key):
+    t = _tree(key)
+    save_checkpoint(str(tmp_path), 5, t)
+    save_checkpoint(str(tmp_path), 10, t)
+    # a crashed save: directory without manifest
+    (tmp_path / "step_15").mkdir()
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_async_save(tmp_path, key):
+    t = _tree(key)
+    thread = save_checkpoint(str(tmp_path), 3, t, async_save=True)
+    thread.join()
+    assert latest_step(str(tmp_path)) == 3
+    m = json.loads((tmp_path / "step_3" / "manifest.json").read_text())
+    assert m["step"] == 3 and m["n_arrays"] == 3
+
+
+def test_train_resume_bitexact(tmp_path):
+    """Kill/restart: resumed run must follow the same loss trajectory."""
+    from repro.launch.train import run
+
+    losses_a, _ = run(
+        "smollm-135m-reduced", steps=8, batch=2, seq=32,
+        ckpt_dir=str(tmp_path), ckpt_every=4, log_every=0,
+    )
+    losses_b, _ = run(
+        "smollm-135m-reduced", steps=8, batch=2, seq=32,
+        ckpt_dir=str(tmp_path), ckpt_every=4, resume=True, log_every=0,
+    )  # resumes at step 8... nothing to do; rerun from 4:
+    # remove step_8 so resume starts at 4 and replays 4..8
+    import shutil
+
+    if (tmp_path / "step_8").exists():
+        shutil.rmtree(tmp_path / "step_8")
+    losses_c, _ = run(
+        "smollm-135m-reduced", steps=8, batch=2, seq=32,
+        ckpt_dir=str(tmp_path), ckpt_every=100, resume=True, log_every=0,
+    )
+    np.testing.assert_allclose(losses_c, losses_a[4:], rtol=1e-4)

@@ -1,0 +1,49 @@
+"""Data pipeline: determinism, resume, token-file source."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, DataIterator, TokenFileSource, synthetic_batch
+
+
+def test_batch_pure_function_of_step():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=3)
+    a = synthetic_batch(cfg, 7)
+    b = synthetic_batch(cfg, 7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = synthetic_batch(cfg, 8)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_targets_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2)
+    b = synthetic_batch(cfg, 0)
+    assert b["tokens"].shape == (2, 8) and b["targets"].shape == (2, 8)
+
+
+def test_iterator_seek_resume():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2)
+    it = DataIterator(cfg)
+    seq = [next(it) for _ in range(5)]
+    it2 = DataIterator(cfg, start_step=3)
+    np.testing.assert_array_equal(
+        np.asarray(seq[3]["tokens"]), np.asarray(next(it2)["tokens"])
+    )
+
+
+def test_token_file_source(tmp_path):
+    toks = np.arange(10_000, dtype=np.uint32) % 512
+    path = tmp_path / "tokens.bin"
+    toks.tofile(path)
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4, token_file=str(path))
+    it = DataIterator(cfg)
+    b1 = next(it)
+    assert b1["tokens"].shape == (4, 32)
+    # next token property holds for the contiguous corpus
+    np.testing.assert_array_equal(
+        np.asarray(b1["targets"][:, :-1]), np.asarray(b1["tokens"][:, 1:])
+    )
+    # deterministic replay
+    it2 = DataIterator(cfg)
+    np.testing.assert_array_equal(
+        np.asarray(next(it2)["tokens"]), np.asarray(b1["tokens"])
+    )

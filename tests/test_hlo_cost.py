@@ -1,0 +1,86 @@
+"""Trip-count-aware HLO cost model: parity with unrolled reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.hlo_cost import analyze_hlo
+
+
+def test_scan_flops_equal_unrolled():
+    N, D = 8, 128
+    w = jnp.zeros((N, D, D), jnp.float32)
+    x = jnp.zeros((4, D), jnp.float32)
+
+    def scanned(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+
+        h, _ = lax.scan(body, x, w)
+        return h.sum()
+
+    def unrolled(x, w):
+        h = x
+        for i in range(N):
+            h = jnp.tanh(h @ w[i])
+        return h.sum()
+
+    fs = analyze_hlo(jax.jit(scanned).lower(x, w).compile().as_text()).flops
+    fu = analyze_hlo(jax.jit(unrolled).lower(x, w).compile().as_text()).flops
+    expected = 2 * 4 * D * D * N
+    assert abs(fs - expected) / expected < 0.02
+    assert abs(fu - expected) / expected < 0.02
+
+
+def test_nested_scan_multiplies():
+    def nested(x):
+        def outer(c, _):
+            def inner(h, _):
+                return jnp.tanh(h @ h), None
+
+            h, _ = lax.scan(inner, c, None, length=3)
+            return h, None
+
+        y, _ = lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    x = jnp.eye(64)
+    f = analyze_hlo(jax.jit(nested).lower(x).compile().as_text()).flops
+    expected = 2 * 64**3 * 15
+    assert abs(f - expected) / expected < 0.05
+
+
+def test_collective_multiplier_inside_scan():
+    import os
+    # collectives require >1 device: emulate via a reduce over a sharded dim
+    # If only 1 device is present, the partitioner emits no collectives; this
+    # test then degrades to asserting the parse returns an empty list.
+    hlo = """
+HloModule test
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8] all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8]) tuple(%ni, %ar)
+}
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8]) tuple(%z, %a)
+  %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    hc = analyze_hlo(hlo)
+    assert len(hc.collectives) == 1
+    op, b, g, m = hc.collectives[0]
+    assert op == "all-reduce" and g == 4 and m == 12 and b == 32

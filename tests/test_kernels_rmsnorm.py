@@ -1,0 +1,41 @@
+"""Fused RMSNorm kernel vs oracle + model-path agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.models.layers import rmsnorm as model_rmsnorm
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (2, 100, 64), (7, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    s = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[-1],), jnp.float32) * 0.1
+    got = np.asarray(rmsnorm(x, s), np.float32)
+    want = np.asarray(rmsnorm_ref(x, s), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_fused_residual():
+    x = jax.random.normal(KEY, (32, 64), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(KEY, 2), (32, 64), jnp.float32)
+    s = jnp.zeros((64,))
+    got = np.asarray(rmsnorm(x, s, residual=r))
+    want = np.asarray(rmsnorm_ref(x, s, residual=r))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_agrees_with_model_path():
+    """kernel == the jnp norm the models/dry-run use."""
+    x = jax.random.normal(KEY, (2, 16, 64), jnp.float32)
+    s = jax.random.normal(jax.random.fold_in(KEY, 3), (64,), jnp.float32) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, s)), np.asarray(model_rmsnorm(x, s)),
+        rtol=1e-5, atol=1e-6,
+    )

@@ -1,0 +1,68 @@
+"""MoE: dispatch equivalence (gshard vs sort), routing invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models.moe import MoESettings, moe_ffn, router_topk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(d, E, F, key=KEY):
+    k = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(k[0], (d, E), jnp.float32) * 0.1,
+        "w1": jax.random.normal(k[1], (E, d, F), jnp.float32) * 0.05,
+        "w3": jax.random.normal(k[2], (E, d, F), jnp.float32) * 0.05,
+        "w2": jax.random.normal(k[3], (E, F, d), jnp.float32) * 0.05,
+    }
+
+
+def test_gshard_equals_sort_when_dropfree():
+    d, E, F, T = 32, 4, 64, 64
+    p = _params(d, E, F)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (T, d), jnp.float32)
+    # capacity_factor=E guarantees no drops in either implementation
+    y1, a1 = moe_ffn(p, x, MoESettings(E, 2, capacity_factor=float(E), dispatch="gshard"), "swiglu")
+    y2, a2 = moe_ffn(p, x, MoESettings(E, 2, capacity_factor=float(E), dispatch="sort"), "swiglu")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_router_gates_normalized():
+    d, E = 16, 8
+    x = jax.random.normal(KEY, (32, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (d, E), jnp.float32)
+    gates, idx, aux = router_topk(x, w, 2)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < E
+    assert float(aux) >= 1.0 - 1e-5  # E * sum(me*ce) >= 1 by Cauchy-Schwarz
+
+
+def test_capacity_drops_reduce_output_norm():
+    """Tokens over capacity are dropped -> lower-capacity output differs."""
+    d, E, F, T = 16, 4, 32, 64
+    p = _params(d, E, F)
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (T, d), jnp.float32)
+    y_full, _ = moe_ffn(p, x, MoESettings(E, 2, capacity_factor=float(E), dispatch="sort"), "swiglu")
+    y_tight, _ = moe_ffn(p, x, MoESettings(E, 2, capacity_factor=0.25, dispatch="sort"), "swiglu")
+    assert not np.allclose(np.asarray(y_full), np.asarray(y_tight))
+
+
+@given(
+    T=st.sampled_from([16, 32, 64]),
+    E=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    dispatch=st.sampled_from(["gshard", "sort"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_moe_output_finite(T, E, k, dispatch):
+    d, F = 16, 32
+    p = _params(d, E, F)
+    x = jax.random.normal(jax.random.fold_in(KEY, T + E), (T, d), jnp.float32)
+    y, aux = moe_ffn(p, x, MoESettings(E, k, dispatch=dispatch), "swiglu")
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.isfinite(float(aux))
