@@ -7,7 +7,6 @@ ViT's MHA throughput suffers from L=197 padding.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -4,14 +4,12 @@ steps, and decode from it.
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import run
-from repro.models import init_params
 from repro.serve.engine import greedy_generate
 
 

@@ -1,8 +1,22 @@
 """Batched serving example across architecture families: dense GQA, MoE,
 attention-free RWKV6, and enc-dec whisper — same engine, different ATBs.
 
+The decode is *sharded*: 4 fake host devices form a (data=1, model=4) mesh,
+params are placed by ``repro.dist.Shardings`` (Megatron orientation with the
+divisibility safety net — smoke-sized dims that do not divide the axis stay
+replicated), and the jitted decode runs under the plan's activation
+constraints.
+
     PYTHONPATH=src python examples/serve_batched.py
 """
+import os
+
+# Prepend (not setdefault): the demo needs its 4 fake devices even when the
+# user already has unrelated XLA_FLAGS set.  Must run before jax imports.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+)
+
 import time
 
 import jax
@@ -10,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.plan import derive_plan
+from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
 from repro.serve.engine import greedy_generate
@@ -22,18 +37,29 @@ def main():
         plan = derive_plan(
             cfg, dict(mesh.shape), batch=4, seq_len=16, training=False
         )
+        sh = Shardings(mesh, plan, cfg)
         params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+        param_sh = sh.param_shardings(params)
+        params = jax.device_put(params, param_sh)
         key = jax.random.PRNGKey(1)
         batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size)}
         if cfg.enc_dec:
             batch["enc_embeds"] = jax.random.normal(
                 key, (4, cfg.enc_seq, cfg.d_model), jnp.float32
             )
+        batch = jax.device_put(batch, sh.batch_shardings(batch))
         t0 = time.time()
-        out = greedy_generate(params, cfg, plan, batch, n_steps=8, cache_len=40)
+        out = greedy_generate(
+            params, cfg, plan, batch, n_steps=8, cache_len=40, shard=sh.constrain
+        )
         dt = time.time() - t0
+        n_sharded = sum(
+            s.spec != jax.sharding.PartitionSpec(*([None] * len(s.spec)))
+            for s in jax.tree.leaves(param_sh)
+        )
         print(
-            f"{arch:18s} generated {out.shape[0]}x{out.shape[1]} tokens in "
+            f"{arch:18s} mesh={dict(mesh.shape)} sharded_leaves={n_sharded:3d} "
+            f"generated {out.shape[0]}x{out.shape[1]} tokens in "
             f"{dt:5.1f}s ({out.size/dt:6.1f} tok/s)  sample: {out[0][:6].tolist()}"
         )
 

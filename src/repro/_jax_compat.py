@@ -1,0 +1,69 @@
+"""Compat shims for the pinned jax toolchain.
+
+The container bakes jax 0.4.37; parts of the codebase (and the test
+contracts) use two newer-jax surfaces:
+
+  * ``jax.sharding.AxisType`` (Auto/Explicit/Manual mesh axis kinds)
+  * ``jax.make_mesh(..., axis_types=...)``
+
+On 0.4.x every mesh axis already behaves as ``Auto``, so the shim supplies
+the enum and teaches ``jax.make_mesh`` to accept (and ignore) the kwarg.
+Applied idempotently from ``repro/__init__`` — no-op on newer jax.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import os
+
+
+def _default_platform() -> None:
+    """Pin JAX_PLATFORMS=cpu when no accelerator runtime is visible.
+
+    Backend auto-probing can hang for minutes in stripped environments
+    (subprocess tests, CI) while it looks for TPU/GPU runtimes that are not
+    there.  Runs before backend init (first device access), never overrides
+    an explicit setting, and stays out of the way on real accelerators.
+    """
+    if "JAX_PLATFORMS" in os.environ:
+        return
+    has_gpu = os.path.exists("/dev/nvidia0")
+    # Hardware, not packages: an installed libtpu without a TPU attached
+    # burns ~30 metadata-server retries per variable before giving up.
+    has_tpu = os.path.exists("/dev/accel0") or "TPU_NAME" in os.environ
+    if not (has_gpu or has_tpu):
+        os.environ["JAX_PLATFORMS"] = "cpu"
+
+
+def ensure_jax_compat() -> None:
+    _default_platform()
+    import jax
+    import jax.sharding as jsh
+
+    # jax snapshots JAX_PLATFORMS at import; if jax was imported before us
+    # (the usual order in scripts) the env var alone is too late.
+    platforms = os.environ.get("JAX_PLATFORMS")
+    if platforms and getattr(jax.config, "jax_platforms", None) != platforms:
+        jax.config.update("jax_platforms", platforms)
+
+    if not hasattr(jsh, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsh.AxisType = AxisType
+
+    if not getattr(jax.make_mesh, "_repro_axis_types_shim", False):
+        params = inspect.signature(jax.make_mesh).parameters
+        if "axis_types" not in params:
+            orig = jax.make_mesh
+
+            @functools.wraps(orig)
+            def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+                del axis_types  # 0.4.x meshes are implicitly Auto
+                return orig(axis_shapes, axis_names, *args, **kw)
+
+            make_mesh._repro_axis_types_shim = True
+            jax.make_mesh = make_mesh

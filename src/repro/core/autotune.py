@@ -19,12 +19,10 @@ import dataclasses
 import time
 from typing import Optional
 
-import jax
-
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.hlo_cost import analyze_hlo
-from repro.core.roofline import _ring_seconds, analytic_memory_floor, model_flops_for
+from repro.core.roofline import _ring_seconds, analytic_memory_floor
 
 
 @dataclasses.dataclass

@@ -16,7 +16,6 @@ Factor2 ~= 7.56 MB) on the paper's own hardware constants.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Mapping, Optional
 
 from repro.core.hardware import DEFAULT_HARDWARE, VCK5000, HardwareSpec
@@ -88,6 +87,21 @@ class ExecutionPlan:
     @property
     def pod_axis(self) -> int:
         return dict(self.mesh_axes).get("pod", 1)
+
+    def mode_for(self, stage: str) -> str:
+        """Parallel mode the dist sharder executes for a stage ("mha"|"ffn").
+
+        When dp_over_model folds the model axis into data parallelism the
+        whole network runs TEMPORAL regardless of per-stage feasibility —
+        the model axis is occupied by batch and cannot also carry TP.
+        """
+        if self.dp_over_model:
+            return TEMPORAL
+        if stage == "mha":
+            return self.mha.mode
+        if stage == "ffn":
+            return self.ffn.mode
+        raise KeyError(f"unknown stage {stage!r}; expected 'mha' or 'ffn'")
 
     def describe(self) -> str:
         rows = [

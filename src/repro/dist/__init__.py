@@ -1,0 +1,22 @@
+"""repro.dist — the execution layer that maps an ExecutionPlan onto devices.
+
+core/plan.py *derives* the accelerator instance (SPATIAL vs TEMPORAL stage
+modes, P_ATB head sharding, remat/microbatching); this package *executes* it:
+
+  sharding.py    PartitionSpecs per parameter/cache/activation path
+                 (Megatron orientation + divisibility safety net)
+  collectives.py manual shard_map collectives (ring overlap matmul,
+                 compressed gradient psum)
+  pipeline.py    TEMPORAL serial-PRG microbatch pipelining over the pod axis
+"""
+from repro.dist.collectives import compressed_psum, overlap_all_gather_matmul
+from repro.dist.pipeline import bubble_fraction, pipeline_forward
+from repro.dist.sharding import Shardings
+
+__all__ = [
+    "Shardings",
+    "overlap_all_gather_matmul",
+    "compressed_psum",
+    "bubble_fraction",
+    "pipeline_forward",
+]

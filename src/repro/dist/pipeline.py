@@ -1,0 +1,78 @@
+"""Pipeline parallelism over the ``pod`` axis (paper mode (2), multi-EDPU).
+
+The paper's TEMPORAL mode runs PRGs serially, each using all compute
+resources; across pods the analogous schedule is a microbatch pipeline:
+stage s (one pod) runs layer-group s, handing activations to stage s+1 via
+``collective-permute`` each tick.  ``bubble_fraction`` is the classic GPipe
+idle fraction that the planner trades off against microbatch memory.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def bubble_fraction(n_micro: int, n_stage: int) -> float:
+    """GPipe bubble: (S-1)/(M+S-1) of step time is idle ramp-up/down."""
+    if n_stage <= 1:
+        return 0.0
+    if n_micro < 1:
+        return 1.0
+    return (n_stage - 1) / (n_micro + n_stage - 1)
+
+
+def pipeline_forward(stage_fn, mesh, axis: str = "pod"):
+    """Build a pipelined forward over ``axis``.
+
+    ``stage_fn(w_stage, x) -> x`` is one stage's compute.  The returned
+    callable takes ``w`` (n_stage, ...) — one leading-dim slice per stage —
+    and ``micro`` (n_micro, mb, ...) microbatches, and returns the
+    microbatches after all stages, bit-identical to running the stages
+    sequentially.  Schedule: n_micro + n_stage - 1 ticks; each tick every
+    device runs its stage on the activation it holds, then the activation
+    ring-advances one stage via collective-permute.
+    """
+    n_stage = dict(mesh.shape)[axis]
+
+    def pipelined(w, micro):
+        def body(wi, mb):
+            stage = lax.axis_index(axis)
+            wi = jnp.squeeze(wi, axis=0)  # (1, ...) local slice -> (...)
+            n_micro = mb.shape[0]
+            ticks = n_micro + n_stage - 1
+            perm = [(j, j + 1) for j in range(n_stage - 1)]
+            out = jnp.zeros_like(mb)
+
+            def tick(t, carry):
+                out, recv = carry
+                # Stage 0 injects microbatch t (clipped: ramp-down ticks feed
+                # it stale data whose results are never written); later stages
+                # consume what the previous stage permuted to them.
+                x_in = jnp.where(stage == 0, mb[jnp.clip(t, 0, n_micro - 1)], recv)
+                y = stage_fn(wi, x_in)
+                # Only the last stage writes: microbatch t - (n_stage-1).
+                out_idx = t - (n_stage - 1)
+                wr = jnp.clip(out_idx, 0, n_micro - 1)
+                keep = (stage == n_stage - 1) & (out_idx >= 0)
+                out = out.at[wr].set(jnp.where(keep, y, out[wr]))
+                recv = y if n_stage == 1 else lax.ppermute(y, axis, perm)
+                return out, recv
+
+            out, _ = lax.fori_loop(0, ticks, tick, (out, jnp.zeros_like(mb[0])))
+            # Results live on the last stage only; the psum (zeros elsewhere)
+            # both completes the sum and replicates for out_specs=P().
+            return lax.psum(out, axis)
+
+        micro_spec = P(*([None] * micro.ndim))
+        w_spec = P(axis, *([None] * (w.ndim - 1)))
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(w_spec, micro_spec),
+            out_specs=micro_spec,
+            check_rep=False,
+        )(w, micro)
+
+    return pipelined

@@ -6,10 +6,8 @@ sequence), mirroring how the paper assigns ATB work to PU specifications.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_call
 

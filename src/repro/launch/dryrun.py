@@ -35,7 +35,7 @@ from repro.launch.mesh import make_production_mesh, mesh_axes_dict
 from repro.models.cache import init_cache
 from repro.models.params import init_params
 from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.train.optimizer import OptimizerConfig, init_state
+from repro.train.optimizer import OptimizerConfig
 from repro.train.train_step import make_train_step
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
@@ -164,6 +164,8 @@ def run_cell(arch, shape, *, multi_pod, force=False, out_dir=RESULTS,
             t2 = time.time()
             ma = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # jax<=0.4.x returns [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             rep = analyze(
                 arch=arch,
@@ -223,6 +225,10 @@ def main():
         "--autotune", action="store_true",
         help="search plan candidates for --arch/--shape and report the winner",
     )
+    ap.add_argument(
+        "--bench-out", default=None,
+        help="write an aggregate JSON of all cells run (CI benchmark artifact)",
+    )
     a = ap.parse_args()
 
     if a.autotune:
@@ -243,10 +249,12 @@ def main():
     shapes = [s for s in ALL_SHAPES if a.shape in (None, s.name)]
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[a.mesh]
     n_ok = n_err = n_skip = 0
+    records = []
     for multi in meshes:
         for arch in archs:
             for shape in shapes:
                 r = run_cell(arch, shape, multi_pod=multi, force=a.force)
+                records.append(r)
                 status = r.get("status")
                 n_ok += status == "ok"
                 n_err += status == "error"
@@ -263,6 +271,17 @@ def main():
                     flush=True,
                 )
     print(f"done: ok={n_ok} err={n_err} skipped={n_skip}")
+    if a.bench_out:
+        pathlib.Path(a.bench_out).write_text(
+            json.dumps(
+                {"ok": n_ok, "err": n_err, "skipped": n_skip, "cells": records},
+                indent=1,
+                default=str,
+            )
+        )
+        print(f"wrote {a.bench_out} ({len(records)} cells)")
+    if n_err:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -12,8 +12,8 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, n_pods: int = 2):
+    shape = (n_pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
@@ -24,10 +24,28 @@ def mesh_axes_dict(mesh) -> dict:
     return dict(mesh.shape)
 
 
-def make_host_mesh():
-    """Whatever devices exist, as a 1x1xN debug mesh (tests/examples)."""
+def make_host_mesh(*, pod: int = 1):
+    """Whatever devices exist, as a debug mesh (tests/examples).
+
+    ``pod=1``: (data=1, model=N).  ``pod>1``: (pod, data=1, model=N/pod) —
+    the multi-EDPU pipeline topology on fake host devices."""
     n = len(jax.devices())
+    if pod > 1:
+        if n % pod:
+            raise ValueError(f"{n} host devices do not split into {pod} pods")
+        return jax.make_mesh(
+            (pod, 1, n // pod), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
     return jax.make_mesh(
         (1, n), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def make_pipeline_mesh(n_stage: int = 0):
+    """A 1-D ("pod",) mesh for pipeline_forward (n_stage=0: all devices)."""
+    n = n_stage or len(jax.devices())
+    return jax.make_mesh(
+        (n,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,)
     )

@@ -70,12 +70,17 @@ def run(
     )
     sh = Shardings(mesh, plan, cfg)
     params = init_params(jax.random.PRNGKey(seed), cfg, plan, dtype=dtype)
+    param_sh = sh.param_shardings(params)
+    params = jax.device_put(params, param_sh)
     state = init_state(params, with_residual=compression != "none")
 
     opt = OptimizerConfig(peak_lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps)
     cc = CompressionConfig(mode=compression)
     step_fn = jax.jit(
-        make_train_step(cfg, plan, opt, shard=sh.constrain, compression=cc),
+        make_train_step(
+            cfg, plan, opt, shard=sh.constrain, compression=cc,
+            grad_shardings=param_sh,
+        ),
         donate_argnums=(0,),
     )
 
@@ -83,7 +88,14 @@ def run(
     if resume and ckpt_dir:
         k = latest_step(ckpt_dir)
         if k is not None:
-            state = restore_checkpoint(ckpt_dir, k, state)
+            # Elastic restore: re-place the big trees on the current mesh so
+            # a resumed run keeps the sharded layout of a fresh one.
+            state_sh = state._replace(
+                step=sh._ns(jax.sharding.PartitionSpec()),
+                params=param_sh, m=param_sh, v=param_sh,
+                residual=None if state.residual is None else param_sh,
+            )
+            state = restore_checkpoint(ckpt_dir, k, state, shardings=state_sh)
             start = k
             print(f"resumed from step {k}")
 
@@ -93,8 +105,12 @@ def run(
     dog = StepWatchdog()
     losses = []
     pending = None
+    batch_sh = None  # built from the first batch; shapes are loop-invariant
     for step in range(start, steps):
         b = next(data)
+        if batch_sh is None:
+            batch_sh = sh.batch_shardings(b)
+        b = jax.device_put(b, batch_sh)
         t0 = time.time()
         state, metrics = step_fn(state, b)
         loss = float(metrics["loss"])

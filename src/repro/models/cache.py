@@ -15,7 +15,7 @@ collect_cache=True forward pass into a decode-ready cache.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ over ``model`` (e.g. mixtral 8e < 16 chips).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ chunk sizes, remat, MoE dispatch) enters.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan
-from repro.models.cache import cache_from_prefill, init_cache
+from repro.models.cache import cache_from_prefill
 from repro.models.transformer import forward, logits_fn
 
 PyTree = Any
@@ -50,10 +50,14 @@ def greedy_generate(
     batch: dict,
     n_steps: int,
     cache_len: int,
+    shard: Callable = Identity,
 ):
-    """Eager helper for the examples/tests (prefill then greedy decode)."""
-    prefill = make_prefill_step(cfg, plan)
-    decode = jax.jit(make_decode_step(cfg, plan))
+    """Eager helper for the examples/tests (prefill then greedy decode).
+
+    ``shard`` is a ``Shardings.constrain``-style callable; the default keeps
+    single-device behaviour unchanged."""
+    prefill = make_prefill_step(cfg, plan, shard=shard)
+    decode = jax.jit(make_decode_step(cfg, plan, shard=shard))
     logits, pc = prefill(params, batch)
     cache = cache_from_prefill(cfg, plan, pc, cache_len)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]

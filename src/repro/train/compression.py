@@ -14,7 +14,7 @@ data-parallel path (``repro.dist.collectives.compressed_psum``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

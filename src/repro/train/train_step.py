@@ -7,7 +7,6 @@ optional gradient compression happen once per step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax

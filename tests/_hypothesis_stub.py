@@ -1,0 +1,79 @@
+"""Minimal property-testing fallback when ``hypothesis`` is not installed.
+
+CI pins the real library (requirements.txt); this stub keeps the suite
+collectable and meaningful in hermetic environments where new packages
+cannot be installed.  It implements exactly the surface the tests use —
+``given``, ``settings``, ``strategies.sampled_from``, ``strategies.integers``
+— by running each test body ``max_examples`` times over deterministic
+pseudo-random draws (fixed seed: reproducible, no flaky CI).
+
+Activated by ``conftest.py`` only when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+class settings:
+    def __init__(self, max_examples: int = 20, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(**strategies):
+    def deco(fn):
+        def runner(*args, **kwargs):
+            cfg = getattr(runner, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", None
+            )
+            n = cfg.max_examples if cfg else 20
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # No functools.wraps: pytest follows __wrapped__ to the original
+        # signature and would treat the strategy kwargs as fixtures.
+        runner.__name__ = getattr(fn, "__name__", "given_test")
+        runner.__qualname__ = getattr(fn, "__qualname__", runner.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__stub__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.sampled_from = sampled_from
+    st.integers = integers
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

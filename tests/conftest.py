@@ -5,6 +5,13 @@ import pytest
 # Smoke tests and benches see the real (single) device; ONLY the dry-run
 # sets xla_force_host_platform_device_count (in its own process).
 
+try:  # real hypothesis when installed (CI); deterministic stub otherwise
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_stub import install as _install_hypothesis_stub
+
+    _install_hypothesis_stub()
+
 
 @pytest.fixture(scope="session")
 def key():

@@ -3,7 +3,7 @@ import json
 import subprocess
 import sys
 
-from repro.core.autotune import Candidate, default_candidates
+from repro.core.autotune import default_candidates
 from repro.configs import get_config
 
 

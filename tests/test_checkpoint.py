@@ -1,11 +1,9 @@
 """Checkpoint: roundtrip, atomic manifests, resume, elastic restore."""
 import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 

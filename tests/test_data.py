@@ -1,8 +1,7 @@
 """Data pipeline: determinism, resume, token-file source."""
 import numpy as np
-import pytest
 
-from repro.data.pipeline import DataConfig, DataIterator, TokenFileSource, synthetic_batch
+from repro.data.pipeline import DataConfig, DataIterator, synthetic_batch
 
 
 def test_batch_pure_function_of_step():

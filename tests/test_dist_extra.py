@@ -1,0 +1,146 @@
+"""Extra coverage for the dist seams: MoE parameter specs (EP and TP modes),
+bubble_fraction edge cases, cache/batch spec corners, degenerate pipelines."""
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.plan import derive_plan
+from repro.dist.pipeline import bubble_fraction, pipeline_forward
+from repro.dist.sharding import Shardings
+from repro.launch.mesh import make_pipeline_mesh
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _sh(arch, mesh_shape=None, **kw):
+    mesh_shape = mesh_shape or {"data": 16, "model": 16}
+    cfg = get_config(arch)
+    plan = derive_plan(cfg, mesh_shape, **kw)
+    return Shardings(FakeMesh(dict(mesh_shape)), plan, cfg), cfg, plan
+
+
+def _path(*names):
+    return [jtu.DictKey(n) for n in names]
+
+
+# ---------------------------------------------------------------- MoE specs
+def test_moe_tp_mode_shards_expert_ffn_width():
+    # mixtral: 8 experts do not divide model=16, but moe_d_ff=14336 does ->
+    # the planner falls back to TP inside each expert.
+    sh, cfg, plan = _sh("mixtral-8x7b", batch=256, seq_len=4096)
+    assert plan.moe_mode == "tp"
+    w1 = sh.param_spec(
+        _path("blocks", "stack", "ffn", "w1"), Leaf((32, 8, 4096, 14336))
+    )
+    assert w1[-1] == "model"  # column parallel on the expert ffn width
+    w2 = sh.param_spec(
+        _path("blocks", "stack", "ffn", "w2"), Leaf((32, 8, 14336, 4096))
+    )
+    assert w2[-2] == "model"  # row parallel on the same width
+
+
+def test_moe_ep_w2_and_router():
+    sh, cfg, plan = _sh("qwen3-moe-30b-a3b", batch=256, seq_len=4096)
+    assert plan.moe_mode == "ep"
+    w2 = sh.param_spec(
+        _path("blocks", "stack", "ffn", "w2"), Leaf((48, 128, 768, 2048))
+    )
+    assert w2[1] == "model"  # experts sharded on the stacked leading dim
+    router = sh.param_spec(
+        _path("blocks", "stack", "ffn", "router"), Leaf((48, 2048, 128))
+    )
+    assert all(ax is None for ax in router)  # router stays replicated
+
+
+def test_moe_ep_nondivisible_experts_dropped():
+    # 128 experts % model=24 != 0: the safety net must drop the axis rather
+    # than let GSPMD pad the expert dim.
+    sh, cfg, plan = _sh(
+        "qwen3-moe-30b-a3b", {"data": 2, "model": 24}, batch=96, seq_len=4096
+    )
+    w1 = sh.param_spec(
+        _path("blocks", "stack", "ffn", "w1"), Leaf((48, 128, 2048, 768))
+    )
+    assert w1[1] is None
+
+
+# ------------------------------------------------------- bubble_fraction edges
+def test_bubble_fraction_single_stage():
+    assert bubble_fraction(1, 1) == 0.0
+    assert bubble_fraction(64, 1) == 0.0
+
+
+def test_bubble_fraction_fewer_micro_than_stages():
+    assert bubble_fraction(2, 4) == pytest.approx(3 / 5)
+    assert bubble_fraction(1, 4) == pytest.approx(3 / 4)
+    assert bubble_fraction(0, 4) == 1.0
+
+
+def test_bubble_fraction_monotone_in_microbatches():
+    vals = [bubble_fraction(m, 4) for m in (1, 2, 4, 8, 16, 64)]
+    assert vals == sorted(vals, reverse=True)
+    assert vals[-1] < 0.05  # deep microbatching amortizes the ramp
+
+
+# ----------------------------------------------------------- spec corner cases
+def test_param_spec_1d_replicated():
+    sh, _, _ = _sh("qwen3-1.7b", batch=256, seq_len=4096)
+    scale = sh.param_spec(
+        _path("blocks", "stack", "attn", "ln", "scale"), Leaf((28, 2048))
+    )
+    assert all(ax is None for ax in scale)
+
+
+def test_cache_heads_sharded_when_divisible():
+    # model=4 divides n_kv_heads=8: prefer head sharding over seq sharding.
+    sh, _, _ = _sh(
+        "qwen3-1.7b", {"data": 4, "model": 4}, batch=128, seq_len=32768,
+        training=False,
+    )
+    spec = sh.cache_spec(
+        _path("layers", "stack", "attn", "k"), Leaf((28, 128, 32768, 8, 128))
+    )
+    assert spec[3] == "model" and spec[2] is None
+
+
+def test_fit_handles_grouped_axes_and_unknown_axes():
+    sh, _, _ = _sh("smollm-135m", batch=256, seq_len=4096)
+    fitted = sh._fit(P(("data", "model"), None), (256, 64))
+    assert fitted[0] == ("data", "model")
+    assert sh._fit(P(("data", "model"), None), (100, 64))[0] is None
+    assert sh._fit(P("pod", None), (64, 64))[0] is None  # axis not in mesh
+
+
+def test_batch_axes_prefer_largest_fold():
+    sh, _, plan = _sh("smollm-135m", batch=256, seq_len=4096)
+    assert plan.dp_over_model
+    assert sh.batch_axes_for(512) == ("data", "model")
+    assert sh.batch_axes_for(48) == ("data",)  # 48 % 256 != 0, 48 % 16 == 0
+
+
+# -------------------------------------------------- degenerate pipeline (S=1)
+def test_pipeline_single_stage_is_plain_forward():
+    # make_pipeline_mesh on this host = a 1-stage ("pod",) mesh; the
+    # schedule degenerates to one tick per microbatch, no permutes.
+    mesh = make_pipeline_mesh()
+    n = dict(mesh.shape)["pod"]
+    w = jax.random.normal(jax.random.PRNGKey(0), (n, 8, 8)) * 0.3
+    micro = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 8))
+    pp = jax.jit(pipeline_forward(lambda wi, x: jnp.tanh(x @ wi), mesh))
+    got = pp(w, micro)
+    ref = micro
+    for i in range(n):
+        ref = jnp.tanh(ref @ w[i])
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-6

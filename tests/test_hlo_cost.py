@@ -1,7 +1,6 @@
 """Trip-count-aware HLO cost model: parity with unrolled reference."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.core.hlo_cost import analyze_hlo
@@ -51,7 +50,6 @@ def test_nested_scan_multiplies():
 
 
 def test_collective_multiplier_inside_scan():
-    import os
     # collectives require >1 device: emulate via a reduce over a sharded dim
     # If only 1 device is present, the partitioner emits no collectives; this
     # test then degrades to asserting the parse returns an empty list.

@@ -3,7 +3,6 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.models.moe import MoESettings, moe_ffn, router_topk

@@ -4,8 +4,6 @@ import json
 import subprocess
 import sys
 
-import pytest
-
 from repro.dist.pipeline import bubble_fraction
 
 

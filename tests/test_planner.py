@@ -4,7 +4,7 @@ import pytest
 from hypothesis import given, settings
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.core.hardware import TPU_V5E, VCK5000
+from repro.core.hardware import TPU_V5E
 from repro.core.plan import (
     PRG_MAX_PIPELINE_DEPTH,
     SPATIAL,

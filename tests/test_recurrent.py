@@ -2,14 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 import hypothesis.strategies as st
 
 from repro.models.rglru import (
     causal_conv1d,
     rglru,
-    rglru_block,
     rglru_decode_step,
     rglru_scan_ref,
 )

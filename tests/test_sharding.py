@@ -1,6 +1,4 @@
 """Sharding rules: divisibility safety net, Megatron orientation, cache specs."""
-import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

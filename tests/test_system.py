@@ -3,10 +3,8 @@ multi-device dry-run machinery works (subprocess: tests keep 1 device)."""
 import json
 import subprocess
 import sys
-import textwrap
 
 import numpy as np
-import pytest
 
 
 def test_training_loss_descends(tmp_path):
