@@ -4,9 +4,16 @@ for the paper's own models (BERT-Base L=256, ViT-Base L=197).
 CPU wall time per stage + derived v5e TOPS from the roofline model; the
 paper's structural claims replicated: system sits between the two stages,
 ViT's MHA throughput suffers from L=197 padding.
+
+Also emits ``BENCH_dist.json``: the gradient-exchange bytes-on-wire
+comparison (fp32 baseline vs the bf16/int8 ``compressed_psum`` wire
+formats from ``dist/collectives.py``) plus the measured int8 round-trip
+error of the exchange on a tiny gradient tree.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +67,59 @@ def _v5e_tops(cfg, L, stage: str) -> float:
     return flops / t / 1e12
 
 
+def grad_exchange_report(archs=("bert-base", "vit-base"), out_path="BENCH_dist.json"):
+    """Bytes-on-wire per gradient exchange, compressed vs uncompressed.
+
+    Analytic per full-size model (one replica's payload per all-reduce, from
+    the parameter count), plus a measured int8 exchange error on the
+    reduced config so the number is grounded in the real collective.
+    """
+    from repro.core.plan import derive_plan
+    from repro.dist.collectives import compressed_psum, wire_bytes
+    from repro.models.params import param_count_tree
+
+    report = {"benchmark": "grad_exchange_bytes_on_wire", "archs": {}}
+    for arch in archs:
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        per_mode = {m: wire_bytes(n, m) for m in ("none", "bf16", "int8")}
+        report["archs"][arch] = {
+            "params": n,
+            "bytes_on_wire": per_mode,
+            "reduction_vs_fp32": {
+                m: round(per_mode["none"] / b, 2) for m, b in per_mode.items()
+            },
+        }
+    # measured: int8 exchange on a reduced-config gradient tree (1 device:
+    # psum over a size-1 axis still runs the full quantize/sum/dequant path)
+    cfg = get_config("bert-base-reduced")
+    plan = derive_plan(cfg, {"data": 1, "model": 1}, batch=2, seq_len=16)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape) * 1e-2, params
+    )
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh(
+        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    exchanged = shard_map(
+        lambda g: jax.tree.map(lambda x: compressed_psum(x, "data", "int8"), g),
+        mesh=mesh, in_specs=(P(),), out_specs=P(), check_rep=False,
+    )(grads)
+    errs = [
+        float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-12))
+        for a, b in zip(jax.tree.leaves(exchanged), jax.tree.leaves(grads))
+    ]
+    report["int8_exchange_max_rel_err"] = max(errs)
+    report["grad_leaves_measured"] = len(errs)
+    report["params_measured"] = param_count_tree(params)
+    pathlib.Path(out_path).write_text(json.dumps(report, indent=1))
+    print(f"wrote {out_path} ({len(report['archs'])} archs)", flush=True)
+    return report
+
+
 def run() -> list[str]:
     out = []
     for arch, L in (("bert-base", 256), ("vit-base", 197)):
@@ -77,6 +137,15 @@ def run() -> list[str]:
         sys_tops = (tops_mha * t_mha + tops_ffn * t_ffn) / (t_mha + t_ffn)
         out.append(
             emit(f"table6/{arch}/system", t_mha + t_ffn, f"v5e_tops={sys_tops:.1f}")
+        )
+    rep = grad_exchange_report()
+    for arch, r in rep["archs"].items():
+        out.append(
+            emit(
+                f"table6/{arch}/grad_wire_int8_reduction",
+                r["bytes_on_wire"]["int8"] / 1e6,
+                f"x{r['reduction_vs_fp32']['int8']}_vs_fp32",
+            )
         )
     return out
 

@@ -1,6 +1,7 @@
 """Plan autotuner — the CAT design-space search made explicit.
 
-The paper derives one accelerator instance from closed-form rules (Eq. 3-8).
+The paper derives one accelerator instance from closed-form rules (Eq. 3-8;
+paper-to-code map: docs/ARCHITECTURE.md).
 This module closes the loop the paper leaves open ("a more complete automatic
 deployment framework", §VI): enumerate a small candidate set of plan
 overrides, dry-run-compile each, score by the roofline step time, and return

@@ -32,7 +32,8 @@ class HardwareSpec:
 
     @property
     def machine_balance_bf16(self) -> float:
-        """FLOPs per HBM byte needed to stay compute bound (Eq. 4 analog)."""
+        """FLOPs per HBM byte needed to stay compute bound (Eq. 4 analog;
+        docs/ARCHITECTURE.md)."""
         return self.peak_flops_bf16 / self.hbm_bandwidth
 
     def matmul_time_s(self, m: int, n: int, k: int, dtype_bytes: int = 2) -> float:

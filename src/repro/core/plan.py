@@ -12,6 +12,12 @@ The plan is a frozen dataclass: a pure function of its inputs, hashable, and
 used as a static argument of jitted step functions.  `design_case_vck5000`
 reproduces the paper's §V.B BERT-Base walk-through numbers (Factor1 ~= 1.5,
 Factor2 ~= 7.56 MB) on the paper's own hardware constants.
+
+The plan is the system's control plane: every field here is consumed by an
+executor — `dist.sharding.Shardings` (specs), `train/train_step.py`
+(microbatching, gradient wire format, pipeline routing), and
+`models/transformer.py` (SP layer stack).  Paper-to-code map with the
+equation cross-references: docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -74,7 +80,15 @@ class ExecutionPlan:
     # remat-saved layer input) is sharded over `model` on the seq dim.
     seq_parallel_acts: bool = False
     # Pod-axis role: "data" (extra DP) or "pipeline" (multi-EDPU pipelining, C9).
+    # "pipeline" routes launch/train.py through dist.pipeline.pipeline_forward:
+    # layer-groups slice over the pod axis, microbatches flow stage-to-stage.
     pod_role: str = "data"
+    # Gradient exchange wire format ("none" | "bf16" | "int8").  When set, the
+    # train step swaps GSPMD's fp32 gradient all-reduce for the shard_map
+    # dist.collectives.compressed_psum exchange (compression happens once, on
+    # the wire); when the mesh cannot host that path the same mode falls back
+    # to train/compression.py's accumulation-dtype quantization.
+    grad_compression: str = "none"
 
     @property
     def model_axis(self) -> int:
@@ -118,6 +132,8 @@ class ExecutionPlan:
             f"  remat/microbatch: {self.remat}/{self.microbatches}",
             f"  embed shard     : {self.embed_shard}   moe: {self.moe_mode}"
             f"   seq_shard: {self.seq_shard}",
+            f"  seq-parallel/SP : {self.seq_parallel_acts}"
+            f"   grad wire: {self.grad_compression}",
         ]
         return "\n".join(rows)
 
@@ -142,6 +158,8 @@ def derive_plan(
     pod_role: str = "data",
     dtype_bytes: int = 2,
     moe_dispatch: str = "gshard",
+    seq_parallel: Optional[bool] = None,
+    grad_compression: str = "none",
 ) -> ExecutionPlan:
     """Top-down derivation (paper §IV): hardware + model jointly decide."""
     ma = mesh_shape.get("model", 1)
@@ -262,8 +280,31 @@ def derive_plan(
     # was REFUTED twice on mistral-large (112s -> 144s collective at micro=2;
     # 935s at micro=16 — GSPMD thrashes between seq-sharded residuals and
     # gathered attention inputs).  Proper SP needs shard_map-manual
-    # collectives; the flag stays off until then.
-    seq_parallel_acts = False
+    # collectives — which models/transformer.sp_stack_forward now supplies
+    # (ring-overlap gather-matmul + reduce-scatter; docs/ARCHITECTURE.md
+    # §"Megatron-SP").  The flag therefore stays opt-in (``seq_parallel=``)
+    # rather than auto-derived, and only engages on meshes/models the manual
+    # path supports: every projection must column/row-shard evenly and the
+    # sequence must split over the model axis.
+    sp_feasible = (
+        ma > 1
+        and not cfg.is_moe
+        and not cfg.enc_dec
+        and all(k in ("attn", "swa", "local") for k in cfg.layer_pattern)
+        and mha_mode == SPATIAL
+        and ffn_mode == SPATIAL
+        and cfg.n_heads % ma == 0
+        and cfg.n_kv_heads % ma == 0
+        and seq_len % ma == 0
+        and cfg.effective_ff_width() % ma == 0
+        and not seq_shard
+        and not zero_weights  # manual ring assumes whole column/row shards
+    )
+    seq_parallel_acts = bool(seq_parallel) and sp_feasible
+    if seq_parallel_acts:
+        # The manual ring needs per-projection column shards: a fused
+        # (q|k|v) column split would hand each device a q/k/v mix.
+        fuse_qkv = False
     # remat-saved layer inputs.  NOTE §Perf iteration log: crediting SP with
     # a /model_axis here (and so cutting microbatches 16->2) was REFUTED on
     # mistral-large — per-microbatch transients grew 8x and temp went 26->35
@@ -282,6 +323,22 @@ def derive_plan(
         and batch % (microbatches * 2) == 0
     ):
         microbatches *= 2
+
+    # Pipeline pods need the pipe *full*: with M microbatches over S stages
+    # the GPipe bubble is (S-1)/(M+S-1) (dist.pipeline.bubble_fraction), so
+    # raise M to the largest batch divisor <= 4*S — 4x stages pushes the
+    # bubble under ~1/5 while per-microbatch memory stays a plan-visible
+    # trade (docs/ARCHITECTURE.md §"Pod axis").
+    pa = mesh_shape.get("pod", 1)
+    if training and pod_role == "pipeline" and pa > 1:
+        for cand in range(min(batch, 4 * pa), microbatches, -1):
+            # the microbatch must still fold over the data axis — token
+            # replication across DP replicas (measured 21x FLOPs waste)
+            # is worse than any bubble, so no fallback: an unfillable
+            # pipe fails loudly in check_pipeline_supported instead.
+            if batch % cand == 0 and cand >= pa and (batch // cand) % max(da, 1) == 0:
+                microbatches = cand
+                break
 
     # ---- Embedding + MoE + sequence sharding. -------------------------------
     if cfg.vocab_size % ma == 0:
@@ -325,6 +382,7 @@ def derive_plan(
         zero_weights=zero_weights,
         seq_parallel_acts=seq_parallel_acts,
         pod_role=pod_role,
+        grad_compression=grad_compression,
     )
 
 

@@ -1,4 +1,5 @@
 """MM PU tile solver — the paper's Eq. 3/4 re-derived for VMEM + MXU.
+(Equation cross-reference: docs/ARCHITECTURE.md.)
 
 Paper (§IV.B): an AIE MM PU is sized by two constraints
   (Eq. 3)  MMSZ_AIE^2 x bit_data <= M_Window / 4     (double-buffered in/out)

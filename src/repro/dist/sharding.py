@@ -13,6 +13,7 @@ GSPMD pad or error — the reduced smoke configs exercise exactly this path.
 """
 from __future__ import annotations
 
+import logging
 import math
 from typing import Any, Optional, Sequence
 
@@ -23,6 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.plan import SPATIAL, ExecutionPlan
 
 PyTree = Any
+
+logger = logging.getLogger(__name__)
 
 # Megatron orientation by leaf name.  Column-parallel weights shard their
 # output (last) dim; row-parallel weights shard their input (second-to-last)
@@ -63,6 +66,7 @@ class Shardings:
         self.plan = plan
         self.cfg = cfg
         self.axis_sizes = dict(mesh.shape)
+        self._fit_warned: set = set()  # (dim, axes) pairs already reported
 
     # ------------------------------------------------------------- helpers
     def _axis(self, name: str) -> int:
@@ -72,7 +76,12 @@ class Shardings:
         return NamedSharding(self.mesh, spec)
 
     def _fit(self, spec: P, shape: Sequence[int]) -> P:
-        """Divisibility safety net: drop mesh axes a dim cannot host."""
+        """Divisibility safety net: drop mesh axes a dim cannot host.
+
+        Each drop is logged once per (dim extent, axes) pair so a
+        misconfigured mesh (e.g. 9 heads on a 16-wide model axis) is
+        debuggable instead of silently running replicated.
+        """
         out = []
         for i, entry in enumerate(spec):
             if entry is None:
@@ -84,6 +93,17 @@ class Shardings:
                 continue
             size = math.prod(self._axis(a) for a in axes)
             ok = i < len(shape) and size > 0 and shape[i] % size == 0
+            if not ok:
+                dim = shape[i] if i < len(shape) else None
+                key = (dim, axes)
+                if key not in self._fit_warned:
+                    self._fit_warned.add(key)
+                    logger.warning(
+                        "Shardings safety net: dim %s (index %d of shape %s) "
+                        "does not divide over mesh axes %s (extent %d); "
+                        "dropping to replicated for arch=%s",
+                        dim, i, tuple(shape), axes, size, self.plan.arch,
+                    )
             out.append(entry if ok else None)
         return P(*out)
 
@@ -161,10 +181,34 @@ class Shardings:
             ):
                 axes = self._dp_axes() if self.plan.dp_over_model else ("data",)
                 spec[-1] = self._entry(axes)
+        # Pipeline pods: the stacked layer-group dim is the stage dim — each
+        # pod holds n_groups/n_stage groups, exactly the per-stage slice
+        # dist.pipeline.pipeline_forward consumes (in_specs P("pod", ...)).
+        if (
+            self.plan.pod_role == "pipeline"
+            and self._axis("pod") > 1
+            and len(names) >= 2
+            and names[0] == "blocks"
+            and names[1] == "stack"
+        ):
+            spec[0] = "pod"
         return self._fit(P(*spec), shape)
 
     def param_shardings(self, params: PyTree) -> PyTree:
         return jtu.tree_map_with_path(lambda p, leaf: self._ns(self.param_spec(p, leaf)), params)
+
+    def stack_specs(self, stack: PyTree) -> PyTree:
+        """Raw PartitionSpecs for the ``blocks.stack`` subtree.
+
+        shard_map ``in_specs`` for the manual-collective layer paths (the
+        Megatron-SP stack and the pipeline scheduler) — the same rules as
+        ``param_spec`` but without wrapping in NamedSharding, and with the
+        path re-rooted at ``blocks.stack`` so leaf names resolve.
+        """
+        prefix = (jtu.DictKey("blocks"), jtu.DictKey("stack"))
+        return jtu.tree_map_with_path(
+            lambda p, leaf: self.param_spec(prefix + tuple(p), leaf), stack
+        )
 
     # ------------------------------------------------------------ decode cache
     def cache_spec(self, path: Sequence, leaf) -> P:

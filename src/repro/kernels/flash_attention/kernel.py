@@ -1,4 +1,5 @@
 """Flash-attention Pallas kernel — the ATB (paper Fig. 3) on TPU.
+(Eq. 7/8 head-parallelism map: docs/ARCHITECTURE.md §"Eq. 7/8".)
 
 The paper inserts softmax into the MM dataflow between the two attention
 matmuls as a PL pipeline branch (C6); on TPU that is exactly the online-

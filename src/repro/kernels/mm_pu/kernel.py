@@ -1,6 +1,7 @@
 """MM PU Pallas kernel — the AIE MM PU (paper §IV.B) as a VMEM-tiled matmul.
 
-Block shapes come from the CAT tile solver (core/pu.py, Eq. 3'/4'): the tile
+Block shapes come from the CAT tile solver (core/pu.py, Eq. 3'/4'; equation
+cross-reference: docs/ARCHITECTURE.md): the tile
 family LARGE/STANDARD/SMALL is the paper's Fig. 4 on TPU.  The epilogue
 (bias / activation / residual / int8 dequant) is the paper's C6: memory-bound
 nonlinear ops ride the MM dataflow instead of round-tripping HBM.

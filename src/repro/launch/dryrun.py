@@ -30,6 +30,7 @@ from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, applicable, get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan
 from repro.core.roofline import analyze, analytic_memory_floor, model_flops_for
+from repro.dist.pipeline import bubble_fraction
 from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_production_mesh, mesh_axes_dict
 from repro.models.cache import init_cache
@@ -106,7 +107,7 @@ def build_cell(cfg, shape, mesh, *, plan_overrides=None):
         )
         step = make_train_step(
             cfg, plan, OptimizerConfig(), shard=sh.constrain,
-            grad_shardings=param_sh,
+            grad_shardings=param_sh, mesh=mesh,
         )
         fn = jax.jit(
             step,
@@ -198,6 +199,19 @@ def run_cell(arch, shape, *, multi_pod, force=False, out_dir=RESULTS,
                     "moe_mode": plan.moe_mode,
                     "moe_dispatch": plan.moe_dispatch,
                     "seq_shard": plan.seq_shard,
+                    "seq_parallel_acts": plan.seq_parallel_acts,
+                    "grad_compression": plan.grad_compression,
+                    # pod-axis accounting: role + GPipe bubble the schedule
+                    # pays at this (stages, microbatches) point
+                    "pod_role": plan.pod_role,
+                    "pipeline_stages": (
+                        plan.pod_axis if plan.pod_role == "pipeline" else 1
+                    ),
+                    "pipeline_bubble": (
+                        bubble_fraction(plan.microbatches, plan.pod_axis)
+                        if plan.pod_role == "pipeline"
+                        else 0.0
+                    ),
                 },
                 **rep.to_dict(),
             }

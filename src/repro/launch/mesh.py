@@ -24,18 +24,29 @@ def mesh_axes_dict(mesh) -> dict:
     return dict(mesh.shape)
 
 
-def make_host_mesh(*, pod: int = 1):
+def make_host_mesh(*, pod: int = 1, data: int = 1):
     """Whatever devices exist, as a debug mesh (tests/examples).
 
-    ``pod=1``: (data=1, model=N).  ``pod>1``: (pod, data=1, model=N/pod) —
-    the multi-EDPU pipeline topology on fake host devices."""
+    ``pod=1, data=1``: (data=1, model=N).  ``data>1``: (data, model=N/data).
+    ``pod>1``: (pod, data, model=N/(pod*data)) — the multi-EDPU pipeline
+    topology on fake host devices, optionally with data parallelism inside
+    each stage."""
     n = len(jax.devices())
     if pod > 1:
-        if n % pod:
-            raise ValueError(f"{n} host devices do not split into {pod} pods")
+        if n % (pod * data):
+            raise ValueError(
+                f"{n} host devices do not split into {pod} pods x {data} dp"
+            )
         return jax.make_mesh(
-            (pod, 1, n // pod), ("pod", "data", "model"),
+            (pod, data, n // (pod * data)), ("pod", "data", "model"),
             axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    if data > 1:
+        if n % data:
+            raise ValueError(f"{n} host devices do not split into data={data}")
+        return jax.make_mesh(
+            (data, n // data), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
         )
     return jax.make_mesh(
         (1, n), ("data", "model"),

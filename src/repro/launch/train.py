@@ -3,6 +3,19 @@
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m-reduced \
         --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --resume
 
+    # pipeline the layer stack over 2 pod stages (+ DP inside each stage)
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m-reduced \
+        --steps 20 --batch 8 --seq 64 --pipeline 2 --dp 2
+
+    # Megatron-SP: seq-sharded residual, ring-overlap collectives
+    PYTHONPATH=src python -m repro.launch.train --arch bert-base-reduced \
+        --steps 20 --batch 8 --seq 64 --dp 2 --seq-parallel
+
+The plan decides, this file executes (docs/ARCHITECTURE.md): pod_role=
+"pipeline" routes the step through dist.pipeline (bubble accounting is
+printed at startup), --compression rides the compressed_psum wire path
+when the mesh is pure-DP and falls back to accumulation-dtype otherwise.
+
 Fault tolerance: periodic async checkpoints (atomic manifests), --resume
 picks the latest complete step and the deterministic data pipeline replays
 from there; a per-step watchdog flags stragglers (wall-clock budget).
@@ -23,9 +36,10 @@ from repro.data.pipeline import DataConfig, DataIterator
 from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.params import init_params
+from repro.dist.pipeline import bubble_fraction
 from repro.train.compression import CompressionConfig
 from repro.train.optimizer import OptimizerConfig, init_state
-from repro.train.train_step import make_train_step
+from repro.train.train_step import make_train_step, wire_compression_axes
 
 
 class StepWatchdog:
@@ -59,27 +73,48 @@ def run(
     ckpt_every: int = 50,
     resume: bool = False,
     compression: str = "none",
+    pipeline: int = 0,
+    dp: int = 1,
+    seq_parallel: bool = False,
+    force_mode: str | None = None,
     seed: int = 0,
     dtype=jnp.float32,
     log_every: int = 10,
 ):
     cfg = get_config(arch)
-    mesh = make_host_mesh()
+    if pipeline > 1 and dp == 1:
+        # pipeline composes with DP, not TP: fold the spare devices into
+        # the data axis instead of leaving a >1 model axis
+        dp = max(1, len(jax.devices()) // pipeline)
+    mesh = make_host_mesh(pod=pipeline if pipeline > 1 else 1, data=dp)
     plan = derive_plan(
-        cfg, dict(mesh.shape), TPU_V5E, batch=batch, seq_len=seq, training=True
+        cfg, dict(mesh.shape), TPU_V5E, batch=batch, seq_len=seq, training=True,
+        pod_role="pipeline" if pipeline > 1 else "data",
+        seq_parallel=seq_parallel, grad_compression=compression,
+        force_mode=force_mode,
     )
+    if plan.pod_role == "pipeline" and plan.pod_axis > 1:
+        print(
+            f"pipeline: {plan.pod_axis} stages x {plan.microbatches} microbatches"
+            f" (bubble {bubble_fraction(plan.microbatches, plan.pod_axis):.1%})"
+        )
+    if seq_parallel and not plan.seq_parallel_acts:
+        print("seq-parallel requested but infeasible for this (arch, mesh); off")
     sh = Shardings(mesh, plan, cfg)
     params = init_params(jax.random.PRNGKey(seed), cfg, plan, dtype=dtype)
     param_sh = sh.param_shardings(params)
     params = jax.device_put(params, param_sh)
-    state = init_state(params, with_residual=compression != "none")
+    # Error-feedback residual only serves the accumulation-dtype fallback;
+    # the wire path (compressed_psum) quantizes on a shared grid instead.
+    wire = wire_compression_axes(plan, mesh, batch) is not None
+    state = init_state(params, with_residual=compression != "none" and not wire)
 
     opt = OptimizerConfig(peak_lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps)
     cc = CompressionConfig(mode=compression)
     step_fn = jax.jit(
         make_train_step(
             cfg, plan, opt, shard=sh.constrain, compression=cc,
-            grad_shardings=param_sh,
+            grad_shardings=param_sh, mesh=mesh,
         ),
         donate_argnums=(0,),
     )
@@ -145,11 +180,25 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compression", default="none", choices=["none", "bf16", "int8"])
+    ap.add_argument(
+        "--pipeline", type=int, default=0,
+        help="pipeline the layer stack over this many pod stages (0/1: off)",
+    )
+    ap.add_argument(
+        "--dp", type=int, default=1,
+        help="data-parallel axis extent of the host mesh",
+    )
+    ap.add_argument(
+        "--seq-parallel", action="store_true",
+        help="Megatron-SP: seq-shard the residual over the model axis",
+    )
+    ap.add_argument("--force-mode", default=None, choices=["spatial", "temporal"])
     a = ap.parse_args()
     losses, _ = run(
         a.arch, steps=a.steps, batch=a.batch, seq=a.seq, lr=a.lr,
         ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every, resume=a.resume,
-        compression=a.compression,
+        compression=a.compression, pipeline=a.pipeline, dp=a.dp,
+        seq_parallel=a.seq_parallel, force_mode=a.force_mode,
     )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 

@@ -211,6 +211,60 @@ def plain_cross_attention(
 
 
 # ---------------------------------------------------------------------------
+# Megatron-SP primitives (manual mode: call INSIDE an enclosing shard_map).
+#
+# The sequence-parallel residual stream lives seq-sharded over the `model`
+# axis; the pair below is the per-stage collective envelope (one gather on
+# the way up, one reduce-scatter on the way down) with the gather executed
+# as the ring-overlap schedule from dist.collectives, so the HLO of the SP
+# layer stack contains collective-permutes but no all-gather.
+# Paper-to-code map: docs/ARCHITECTURE.md §"Megatron-SP".
+# ---------------------------------------------------------------------------
+def sp_gather_matmul(
+    x_local: jax.Array, w_shard: jax.Array, axis: str, n_shards: int
+) -> jax.Array:
+    """Seq-sharded ``x_local`` (B, S/n, D) times column shard ``w_shard``
+    (D, N/n) -> full-sequence (B, S, N/n), gathering S over the ring."""
+    from repro.dist.collectives import ring_gather_matmul
+
+    return ring_gather_matmul(x_local, w_shard, axis, n_shards, gather_dim=1)
+
+
+def sp_scatter_matmul(x_full: jax.Array, w_shard: jax.Array, axis: str) -> jax.Array:
+    """Row-parallel tail: full-sequence partials ``x_full`` (B, S, K/n) times
+    ``w_shard`` (K/n, D), summed over ``axis`` and handed back to each device
+    as its sequence chunk (B, S/n, D) in one reduce-scatter."""
+    from repro.dist.collectives import seq_scatter
+
+    return seq_scatter(x_full @ w_shard, axis, scatter_dim=1)
+
+
+def sp_mlp(
+    params: dict, x_local: jax.Array, activation: str, axis: str, n_shards: int
+) -> jax.Array:
+    """The FFN stage under Megatron-SP: one ring gather feeds the (fused
+    w1|w3) column shards, one reduce-scatter returns the row-parallel w2
+    product to the seq-sharded residual.  Numerically identical to ``mlp``
+    up to the fp32 reduction order."""
+    if activation in ("swiglu", "geglu"):
+        w13 = jnp.concatenate([params["w1"], params["w3"]], axis=-1)
+        hg = sp_gather_matmul(x_local, w13, axis, n_shards)
+        h, g = jnp.split(hg, [params["w1"].shape[-1]], axis=-1)
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True)
+        )
+        h = act(h) * g
+    elif activation == "gelu":
+        h = jax.nn.gelu(
+            sp_gather_matmul(x_local, params["w1"], axis, n_shards),
+            approximate=True,
+        )
+    else:
+        raise ValueError(f"sp_mlp does not handle activation={activation!r}")
+    return sp_scatter_matmul(h, params["w2"], axis)
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:

@@ -17,6 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan
 from repro.models import layers as L
@@ -216,6 +219,117 @@ def edpu_layer(
 
 
 # ---------------------------------------------------------------------------
+# Megatron-SP layer stack (manual collectives; docs/ARCHITECTURE.md
+# §"Megatron-SP").  The residual stream is seq-sharded over `model`; each
+# stage is one ring gather-matmul up and one reduce-scatter down, so the
+# layernorm path lowers with zero all-gather ops.
+# ---------------------------------------------------------------------------
+def sp_edpu_layer(
+    lp: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    kind: str,
+    positions: jax.Array,
+    axis: str = "model",
+    n_shards: int = 1,
+):
+    """One EDPU layer on the sequence-parallel residual.
+
+    ``x`` is this device's (B_local, S/n, d) sequence chunk; weights are the
+    local Megatron column/row shards (SP plans force unfused QKV so each
+    projection splits on clean head boundaries).  Norms are token-local so
+    they run directly on the chunk — the paper's "nonlinear operators
+    inserted into the MM dataflow" (C6) costs no communication here.
+    """
+    ap = lp["attn"]
+    Dh = cfg.d_head
+    window = (
+        cfg.sliding_window
+        if kind == "swa"
+        else cfg.local_window if kind == "local" else 0
+    )
+
+    # ---- MHA Stage: gather(seq) -> local heads -> scatter(seq) ------------
+    h = L.apply_norm(ap["ln"], x, cfg.norm)
+    wq, wk, wv = ap["wq"], ap["wk"], ap["wv"]
+    qkv = L.sp_gather_matmul(
+        h, jnp.concatenate([wq, wk, wv], axis=-1), axis, n_shards
+    )
+    q, k, v = jnp.split(
+        qkv, [wq.shape[-1], wq.shape[-1] + wk.shape[-1]], axis=-1
+    )
+    B, S = q.shape[0], q.shape[1]
+    q = q.reshape(B, S, wq.shape[-1] // Dh, Dh)  # local heads H/n
+    k = k.reshape(B, S, wk.shape[-1] // Dh, Dh)  # local KV heads KV/n
+    v = v.reshape(B, S, wv.shape[-1] // Dh, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, ap["q_norm"])
+        k = L.rmsnorm(k, ap["k_norm"])
+    if cfg.pos_embedding == "rope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    o = L.blocked_attention(
+        q, k, v,
+        causal=False if cfg.encoder_only else cfg.causal,
+        window=window,
+        q_chunk=plan.mha.pu.block_m,
+        k_chunk=plan.mha.pu.block_n,
+    )
+    o = o.reshape(B, S, o.shape[-2] * Dh)
+    x = x + L.sp_scatter_matmul(o, ap["wo"], axis)
+
+    # ---- FFN Stage --------------------------------------------------------
+    h2 = L.apply_norm(lp["ffn"]["ln"], x, cfg.norm)
+    return x + L.sp_mlp(lp["ffn"], h2, cfg.activation, axis, n_shards)
+
+
+def sp_stack_forward(
+    stack: PyTree,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    mesh,
+    positions: jax.Array,
+    axis: str = "model",
+):
+    """Run the stacked pattern-groups under shard_map with the residual
+    seq-sharded over ``axis`` (Megatron-SP).  In/out spec for ``x`` comes
+    from the same ``Shardings`` rules the GSPMD path uses, so entering and
+    leaving the manual region needs no resharding."""
+    from repro.dist.sharding import Shardings
+
+    n_shards = dict(mesh.shape)[axis]
+    pattern = cfg.layer_pattern
+    sh = Shardings(mesh, plan, cfg)
+    x_spec = sh.act_spec("act_hidden", x.shape)
+    stack_specs = sh.stack_specs(stack)
+
+    def body(wl, xl, pos):
+        def group(xx, gp):
+            for i, kind in enumerate(pattern):
+                xx = sp_edpu_layer(
+                    gp[i], xx, cfg=cfg, plan=plan, kind=kind,
+                    positions=pos, axis=axis, n_shards=n_shards,
+                )
+            return xx, None
+
+        gb = jax.checkpoint(group) if plan.remat else group
+        xl, _ = lax.scan(gb, xl, wl)
+        return xl
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(stack_specs, x_spec, PartitionSpec(None, None)),
+        out_specs=x_spec,
+        check_rep=False,
+    )(stack, x, positions)
+
+
+# ---------------------------------------------------------------------------
 # Stacks
 # ---------------------------------------------------------------------------
 def _run_stack(
@@ -281,23 +395,10 @@ def _weight_dtype(params: PyTree):
     return jnp.bfloat16
 
 
-def forward(
-    params: PyTree,
-    batch: dict,
-    *,
-    cfg: ArchConfig,
-    plan: ExecutionPlan,
-    cache: Optional[PyTree] = None,
-    collect_cache: bool = False,
-    shard: Callable = Identity,
-):
-    """Full model forward.
-
-    batch keys (by arch): "tokens" (B,S) int32; optional "prefix_embeds"
-    (B,P,d); enc-dec: "enc_embeds" (B,Se,d).  With ``cache`` set, runs one
-    decode step (S == 1).  Returns (hidden (B,S,d), new_cache, aux).
-    """
-    dtype = _weight_dtype(params)
+def _embed_inputs(params: PyTree, batch: dict, cfg: ArchConfig, cache, dtype):
+    """Token/prefix embedding + position injection (shared by the plain,
+    sequence-parallel, and pipelined forwards).  Returns (x, positions,
+    prefix_len)."""
     x_parts = []
     prefix_len = 0
     if "prefix_embeds" in batch:
@@ -309,7 +410,7 @@ def forward(
             emb = emb * jnp.asarray(cfg.d_model**0.5, dtype)
         x_parts.append(emb)
     x = x_parts[0] if len(x_parts) == 1 else jnp.concatenate(x_parts, axis=1)
-    B, S, _ = x.shape
+    S = x.shape[1]
 
     t0 = 0 if cache is None else cache["t"]
     positions = t0 + jnp.arange(S)[None, :]
@@ -325,6 +426,33 @@ def forward(
             x = x + lax.dynamic_slice_in_dim(
                 L.sinusoidal_positions(cfg.max_seq_len, cfg.d_model).astype(dtype),
                 t0, 1)[None]
+    return x, positions, prefix_len
+
+
+def forward(
+    params: PyTree,
+    batch: dict,
+    *,
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    cache: Optional[PyTree] = None,
+    collect_cache: bool = False,
+    shard: Callable = Identity,
+    mesh=None,
+):
+    """Full model forward.
+
+    batch keys (by arch): "tokens" (B,S) int32; optional "prefix_embeds"
+    (B,P,d); enc-dec: "enc_embeds" (B,Se,d).  With ``cache`` set, runs one
+    decode step (S == 1).  Returns (hidden (B,S,d), new_cache, aux).
+
+    With ``plan.seq_parallel_acts`` and a real ``mesh``, the stacked
+    layer-groups run through the Megatron-SP manual-collective path
+    (:func:`sp_stack_forward`); everything else stays on the GSPMD path.
+    """
+    dtype = _weight_dtype(params)
+    x, positions, prefix_len = _embed_inputs(params, batch, cfg, cache, dtype)
+    B, S, _ = x.shape
     x = shard(x, "act_hidden")
 
     # ---- encoder (enc-dec archs) -------------------------------------------
@@ -360,9 +488,30 @@ def forward(
         )
 
     layer_caches = None if cache is None else cache["layers"]
-    x, new_layer_caches, aux = _run_stack(
-        params["blocks"], x, layer_fn, cfg.layer_pattern, layer_caches, plan.remat
+    use_sp = (
+        plan.seq_parallel_acts
+        and mesh is not None
+        and cache is None
+        and not collect_cache
+        and prefix_len == 0
+        and params["blocks"]["stack"] is not None
     )
+    if use_sp:
+        x = sp_stack_forward(
+            params["blocks"]["stack"], x, cfg=cfg, plan=plan, mesh=mesh,
+            positions=positions,
+        )
+        # tail layers (if any) stay on the GSPMD path
+        x, new_layer_caches, aux = _run_stack(
+            {"stack": None, "tail": params["blocks"]["tail"]}, x, layer_fn,
+            cfg.layer_pattern, None, plan.remat,
+        )
+        new_layer_caches = None
+    else:
+        x, new_layer_caches, aux = _run_stack(
+            params["blocks"], x, layer_fn, cfg.layer_pattern, layer_caches,
+            plan.remat,
+        )
     x = L.apply_norm(params["final_norm"], x, cfg.norm)
 
     new_cache = None
@@ -426,9 +575,9 @@ def chunked_softmax_xent(
     return total, jnp.maximum(n, 1.0)
 
 
-def lm_loss(params: PyTree, batch: dict, *, cfg: ArchConfig, plan: ExecutionPlan,
-            shard: Callable = Identity):
-    x, _, aux = forward(params, batch, cfg=cfg, plan=plan, shard=shard)
+def _head_loss(params: PyTree, x: jax.Array, batch: dict, cfg: ArchConfig,
+               aux: jax.Array):
+    """Loss from final hidden states (shared by every forward variant)."""
     if cfg.n_classes:  # classifier head (ViT)
         logits = logits_fn(params, x, cfg).astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
@@ -445,3 +594,118 @@ def lm_loss(params: PyTree, batch: dict, *, cfg: ArchConfig, plan: ExecutionPlan
         x = x[:, P:]
     total, n = chunked_softmax_xent(x, w, targets, batch.get("loss_mask"))
     return total / n + 0.01 * aux
+
+
+def lm_loss(params: PyTree, batch: dict, *, cfg: ArchConfig, plan: ExecutionPlan,
+            shard: Callable = Identity, mesh=None):
+    x, _, aux = forward(params, batch, cfg=cfg, plan=plan, shard=shard, mesh=mesh)
+    return _head_loss(params, x, batch, cfg, aux)
+
+
+def check_pipeline_supported(cfg: ArchConfig, plan: ExecutionPlan, batch: int):
+    """Raise with the first reason a pod_role="pipeline" plan cannot route
+    through pipeline_lm_loss; return (n_stage, n_micro) when it can."""
+    n_stage = plan.pod_axis
+    n_micro = plan.microbatches
+    reasons = []
+    if n_stage <= 1:
+        reasons.append("pod axis has a single stage")
+    if plan.model_axis > 1:
+        # pipeline_forward's weight in_specs are P("pod", ...) only: a >1
+        # model axis would gather the TP weight shards every step and
+        # duplicate the stage compute across it
+        reasons.append(
+            f"model axis {plan.model_axis} > 1 (pipeline composes with DP, "
+            "not TP; put the spare devices on 'data')"
+        )
+    if cfg.is_moe:
+        reasons.append("MoE aux losses do not cross stage boundaries yet")
+    if cfg.enc_dec or cfg.frontend != "none":
+        reasons.append("enc-dec/frontends keep non-stack state")
+    if batch % max(n_micro, 1):
+        reasons.append(f"batch {batch} not divisible by microbatches {n_micro}")
+    elif (batch // max(n_micro, 1)) % max(plan.data_axis, 1):
+        # replication across DP replicas (measured 21x FLOPs waste) must
+        # fail loudly, never run silently
+        reasons.append(
+            f"microbatch {batch // max(n_micro, 1)} does not fold over "
+            f"data axis {plan.data_axis}"
+        )
+    if n_micro < n_stage:
+        reasons.append(f"microbatches {n_micro} < stages {n_stage}")
+    if reasons:
+        raise ValueError(
+            "pod_role='pipeline' plan cannot execute: " + "; ".join(reasons)
+        )
+    return n_stage, n_micro
+
+
+def pipeline_lm_loss(params: PyTree, batch: dict, *, cfg: ArchConfig,
+                     plan: ExecutionPlan, mesh, shard: Callable = Identity):
+    """LM loss with the stacked layer-groups run as pipeline stages over the
+    ``pod`` axis (dist.pipeline.pipeline_forward; docs/ARCHITECTURE.md
+    §"Pod axis").
+
+    Embedding, tail layers, final norm, and the loss head run on the GSPMD
+    path (replicated over ``pod``); the stack weights are sliced per stage
+    (``Shardings.param_spec`` puts ``pod`` on the stacked leading dim) and
+    microbatches flow stage-to-stage via collective-permute.  Numerically
+    identical to the data-parallel baseline: the same layers run on the
+    same tokens, only the schedule changes.
+    """
+    from repro.dist.pipeline import pipeline_forward
+    from repro.dist.sharding import Shardings
+
+    dtype = _weight_dtype(params)
+    x, positions, prefix_len = _embed_inputs(params, batch, cfg, None, dtype)
+    B, S, D = x.shape
+    n_stage, n_micro = check_pipeline_supported(cfg, plan, B)
+    stack = params["blocks"]["stack"]
+    n_groups = jax.tree.leaves(stack)[0].shape[0]
+    if n_groups % n_stage:
+        raise ValueError(
+            f"{n_groups} stacked layer-groups do not split into "
+            f"{n_stage} pipeline stages"
+        )
+    x = shard(x, "act_hidden")
+    micro = x.reshape(n_micro, B // n_micro, S, D)
+
+    sh = Shardings(mesh, plan, cfg)
+    batch_axes = sh.batch_axes_for(B // n_micro) or ()
+    pattern = cfg.layer_pattern
+
+    def stage_fn(wl, xm):
+        # positions recomputed from the microbatch shape: shard_map (inside
+        # pipeline_forward) must not close over traced arrays.
+        pos = jnp.arange(xm.shape[1])[None, :]
+
+        def group(xx, gp):
+            for i, kind in enumerate(pattern):
+                xx, _, _ = edpu_layer(
+                    gp[i], xx, cfg=cfg, plan=plan, kind=kind,
+                    positions=pos, prefix_len=prefix_len,
+                    causal_override=False if cfg.encoder_only else None,
+                )
+            return xx, None
+
+        gb = jax.checkpoint(group) if plan.remat else group
+        xm, _ = lax.scan(gb, xm, wl)
+        return xm
+
+    pp = pipeline_forward(stage_fn, mesh, axis="pod", batch_axes=tuple(batch_axes))
+    x = pp(stack, micro).reshape(B, S, D)
+
+    # tail layers reuse the shared stack runner (same as the SP branch)
+    def layer_fn(lp, xx, kind, c):
+        return edpu_layer(
+            lp, xx, cfg=cfg, plan=plan, kind=kind, positions=positions,
+            prefix_len=prefix_len,
+            causal_override=False if cfg.encoder_only else None, shard=shard,
+        )
+
+    x, _, aux = _run_stack(
+        {"stack": None, "tail": params["blocks"]["tail"]}, x, layer_fn,
+        pattern, None, plan.remat,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return _head_loss(params, x, batch, cfg, aux)

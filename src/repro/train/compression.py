@@ -1,15 +1,21 @@
-"""Gradient compression with error feedback.
+"""Gradient compression: the quantization grid + the dtype-level fallback.
 
 At 1000+ node scale the gradient all-reduce over the ``data``/``pod`` axes is
 the exposure window for stragglers; compressing it shrinks that window.
-Under automatic SPMD the all-reduce lives inside the backward pass, so the
-compression point we control is the *accumulation/exchange dtype*: gradients
-are quantized (bf16 or int8 + per-leaf scale) before they cross microbatch /
-replica boundaries, with an fp32 error-feedback residual carried in the
-train state so the quantization noise is unbiased over steps.
+There are two execution points, both driven by ``plan.grad_compression``
+(docs/ARCHITECTURE.md §"Communication schedule"):
 
-``quantize``/``dequantize`` are also used by the shard_map manual-collective
-data-parallel path (``repro.dist.collectives.compressed_psum``).
+* **Wire path** (preferred): on a pure data-parallel mesh the train step
+  exchanges per-replica gradients itself through
+  ``dist.collectives.compressed_psum``, which reuses this module's
+  ``quantize`` with a shared cross-replica scale — compression happens
+  once, on the wire, and no error-feedback state is needed (the exchange
+  is the only lossy step and its noise is zero-mean by construction).
+* **Dtype fallback**: when the mesh also shards weights (TP/ZeRO/SP) the
+  all-reduce lives inside the GSPMD backward where we cannot intercept it,
+  so ``compress_grads`` quantizes at the accumulation boundary instead,
+  with an fp32 error-feedback residual carried in the train state so the
+  quantization noise is unbiased over steps.
 """
 from __future__ import annotations
 
@@ -28,11 +34,19 @@ class CompressionConfig:
     error_feedback: bool = True
 
 
-def quantize(g: jax.Array, mode: str):
+def quantize(g: jax.Array, mode: str, scale: jax.Array | None = None):
+    """Quantize one gradient leaf into the wire format.
+
+    ``scale=None`` (the dtype-level path) derives a local per-leaf grid from
+    ``max |g|``.  The shard_map wire path (``dist.collectives.compressed_psum``)
+    passes a *shared* cross-replica scale (a pmax) so every replica's payload
+    sits on the same int8 grid and the exchange can sum raw integers.
+    """
     if mode == "bf16":
         return g.astype(jnp.bfloat16), None
     if mode == "int8":
-        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        if scale is None:
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
         q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
         return q, scale
     return g, None

@@ -130,6 +130,22 @@ def test_batch_axes_prefer_largest_fold():
     assert sh.batch_axes_for(48) == ("data",)  # 48 % 256 != 0, 48 % 16 == 0
 
 
+# ------------------------------------------------- _fit safety-net logging
+def test_fit_drop_logs_offending_dim_and_axis(caplog):
+    sh, _, _ = _sh("smollm-135m", batch=256, seq_len=4096)
+    with caplog.at_level("WARNING", logger="repro.dist.sharding"):
+        fitted = sh._fit(P(None, "model"), (256, 100))  # 100 % 16 != 0
+    assert fitted[1] is None
+    assert any(
+        "100" in rec.message and "model" in rec.message
+        for rec in caplog.records
+    ), caplog.records
+    # deduped: the same (dim, axis) pair warns once
+    n = len(caplog.records)
+    sh._fit(P(None, "model"), (256, 100))
+    assert len(caplog.records) == n
+
+
 # -------------------------------------------------- degenerate pipeline (S=1)
 def test_pipeline_single_stage_is_plain_forward():
     # make_pipeline_mesh on this host = a 1-stage ("pod",) mesh; the
@@ -138,7 +154,8 @@ def test_pipeline_single_stage_is_plain_forward():
     n = dict(mesh.shape)["pod"]
     w = jax.random.normal(jax.random.PRNGKey(0), (n, 8, 8)) * 0.3
     micro = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 8))
-    pp = jax.jit(pipeline_forward(lambda wi, x: jnp.tanh(x @ wi), mesh))
+    # stage_fn receives its local leading-dim slice: (1, 8, 8) here
+    pp = jax.jit(pipeline_forward(lambda wi, x: jnp.tanh(x @ wi[0]), mesh))
     got = pp(w, micro)
     ref = micro
     for i in range(n):

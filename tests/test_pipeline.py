@@ -28,7 +28,7 @@ w = jax.random.normal(key, (4, D, D), jnp.float32) * 0.3  # one layer per stage
 micro = jax.random.normal(jax.random.fold_in(key, 1), (6, 2, D), jnp.float32)
 
 def stage_fn(wi, x):
-    return jnp.tanh(x @ wi)
+    return jnp.tanh(x @ wi[0])  # wi: this stage's (1, D, D) leading-dim slice
 
 pp = jax.jit(pipeline_forward(stage_fn, mesh, axis="pod"))
 got = pp(w, micro)
