@@ -8,6 +8,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         fig5_batch_sweep,
+        serve_sweep,
         table2_parallel_modes,
         table5_utilization,
         table6_stage_perf,
@@ -22,6 +23,7 @@ def main() -> None:
         table6_stage_perf,
         table7_comparison,
         fig5_batch_sweep,
+        serve_sweep,
     ):
         try:
             mod.run()

@@ -1,0 +1,111 @@
+"""Serving throughput: continuous-batching smoke + batch-occupancy sweep.
+
+Two entry points:
+
+* ``serving_smoke(arch, out)`` — drive the continuous-batching engine over a
+  short mixed prefill/decode stream (staggered arrivals) and write
+  ``BENCH_serve.json`` (tokens/s, steps, mean batch occupancy, serve plan).
+  CI runs this on smollm-135m and uploads the artifact next to
+  BENCH_smoke/BENCH_dist, so serving throughput is measurable across PRs.
+* ``run()`` — the benchmarks/run.py hook: sweep the decode-slot count on the
+  reduced config and emit ``serve_sweep/batchN`` CSV rows; occupancy in the
+  derived column shows where slot count stops buying throughput.
+
+    PYTHONPATH=src:. python -m benchmarks.serve_sweep --smoke \
+        --arch smollm-135m --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.plan import derive_plan, derive_serve_plan
+from repro.models.params import init_params
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import random_stream
+
+
+def _drive(cfg, decode_batch, *, n_requests=8, prompt_len=32, gen=16, stagger=2,
+           seed=0):
+    mesh = {"data": 1, "model": 1}
+    plan = derive_plan(
+        cfg, mesh, TPU_V5E, batch=decode_batch, seq_len=prompt_len, training=False
+    )
+    serve = derive_serve_plan(
+        cfg, mesh, TPU_V5E,
+        max_seq_len=max(64, prompt_len + gen),
+        decode_batch=decode_batch,
+        prefill_chunk=prompt_len,
+    )
+    params = init_params(jax.random.PRNGKey(seed), cfg, plan, dtype=jnp.float32)
+    engine = ServingEngine(params, cfg, plan, serve)
+    # warm the two jitted steps on a throwaway request so the measured
+    # stream times serving, not XLA compilation
+    engine.run(random_stream(cfg, 1, prompt_len, 2, seed=99, rid_prefix="warm"))
+    engine.reset_stats()
+    t0 = time.perf_counter()
+    engine.run(random_stream(cfg, n_requests, prompt_len, gen, stagger, seed=7))
+    wall = time.perf_counter() - t0
+    s = engine.summary()
+    s["wall_s"] = wall
+    return s
+
+
+def serving_smoke(arch: str = "smollm-135m", out: str = "BENCH_serve.json") -> dict:
+    cfg = get_config(arch)
+    s = _drive(cfg, decode_batch=4, n_requests=6, prompt_len=32, gen=12, stagger=2)
+    record = {
+        "arch": arch,
+        "tokens_per_s": s["tok_per_s"],
+        "decode_tokens": s["decode_tokens"],
+        "prefill_tokens": s["prefill_tokens"],
+        "decode_steps": s["decode_steps"],
+        "prefill_steps": s["prefill_steps"],
+        "mean_occupancy": s["mean_occupancy"],
+        "evictions": s["evictions"],
+        "traces": s["traces"],
+        "wall_s": s["wall_s"],
+        "serve_plan": s["serve_plan"],
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {out}: {record['tokens_per_s']:.1f} tok/s "
+          f"occupancy={record['mean_occupancy']:.2f}")
+    return record
+
+
+def run() -> list[str]:
+    """Batch-occupancy sweep on the reduced config (benchmarks/run.py hook)."""
+    cfg = get_config("smollm-135m").reduced()
+    out = []
+    for b in (1, 2, 4, 8):
+        s = _drive(cfg, decode_batch=b, n_requests=8, prompt_len=16, gen=8,
+                   stagger=1)
+        out.append(
+            emit(
+                f"serve_sweep/batch{b}",
+                s["wall_s"] * 1e6,
+                f"tok_s={s['tok_per_s']:.1f};occ={s['mean_occupancy']:.2f};"
+                f"kv={s['serve_plan']['kv_dtype']}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    a = ap.parse_args()
+    if a.smoke:
+        serving_smoke(a.arch, a.out)
+    else:
+        run()

@@ -7,6 +7,10 @@ divisibility safety net — smoke-sized dims that do not divide the axis stay
 replicated), and the jitted decode runs under the plan's activation
 constraints.
 
+Part 2 serves a *staggered* request stream through the continuous-batching
+engine (paged KV cache + prefill/decode scheduler) on the same sharded
+mesh — mixed prompt lengths, no lockstep, one trace per step kind.
+
     PYTHONPATH=src python examples/serve_batched.py
 """
 import os
@@ -62,6 +66,29 @@ def main():
             f"generated {out.shape[0]}x{out.shape[1]} tokens in "
             f"{dt:5.1f}s ({out.size/dt:6.1f} tok/s)  sample: {out[0][:6].tolist()}"
         )
+
+    # ---- part 2: continuous batching on the sharded mesh -------------------
+    from repro.core.plan import derive_serve_plan
+    from repro.serve import ServingEngine
+    from repro.serve.scheduler import random_stream
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    plan = derive_plan(cfg, dict(mesh.shape), batch=4, seq_len=16, training=False)
+    serve = derive_serve_plan(
+        cfg, dict(mesh.shape), max_seq_len=64, decode_batch=4, prefill_chunk=8
+    )
+    sh = Shardings(mesh, plan, cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    params = jax.device_put(params, sh.param_shardings(params))
+    reqs = random_stream(cfg, 6, (4, 14), gen=8, stagger=2, seed=0, rid_prefix="r")
+    engine = ServingEngine(params, cfg, plan, serve, shardings=sh)
+    out = engine.run(reqs)
+    s = engine.summary()
+    print(
+        f"continuous batching: {len(out)} staggered requests, "
+        f"occupancy={s['mean_occupancy']:.2f} traces={s['traces']} "
+        f"tok/s={s['tok_per_s']:.1f}  r000: {out['r000']}"
+    )
 
 
 if __name__ == "__main__":

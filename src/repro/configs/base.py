@@ -111,10 +111,17 @@ class ArchConfig:
         elif kind == "rglru":
             w = self.lru_width or self.d_model
             # in/out proj (x2 branches), temporal conv, recurrence + input gates
-            core = 2 * self.d_model * w + w * self.d_model + self.conv_width * w + 2 * w * w // max(self.rnn_heads, 1) + 2 * w
+            core = (
+                2 * self.d_model * w
+                + w * self.d_model
+                + self.conv_width * w
+                + 2 * w * w // max(self.rnn_heads, 1)
+                + 2 * w
+            )
         elif kind == "rwkv6":
             d = self.d_model
-            core = 4 * d * d + d * self.rnn_heads * self.d_head  # r,k,v,o + gates (lora decays ~small)
+            # r,k,v,o + gates (lora decays ~small)
+            core = 4 * d * d + d * self.rnn_heads * self.d_head
         else:
             raise ValueError(kind)
         return core + self._ffn_params() + 2 * self.d_model  # norms

@@ -387,6 +387,178 @@ def derive_plan(
 
 
 # ---------------------------------------------------------------------------
+# Serve mode: the plan layer for the continuous-batching engine.
+#
+# CAT is an *inference* framework — the same top-down contract that decides
+# the training mesh (hardware + model jointly constrain) decides the serving
+# knobs: how many decode slots run concurrently, how the paged KV cache is
+# blocked, and what dtype the KV pages hold.  `serve/engine.py` executes
+# these decisions; `launch/serve.py` and the dry-run surface them.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Derived serving configuration for one (arch x mesh x hardware).
+
+    Frozen + hashable so it can ride as a static argument of the jitted
+    prefill/decode steps exactly like :class:`ExecutionPlan`.
+    """
+
+    arch: str
+    # Concurrent decode slots (the engine's static decode batch).
+    decode_batch: int
+    # Paged KV cache geometry: tokens per block / pool blocks per attention
+    # layer / table width per request.  Block 0 is the trash block (writes
+    # from idle slots land there), so the allocatable pool is n_blocks - 1.
+    block_size: int
+    n_blocks: int
+    max_blocks_per_seq: int
+    # KV page dtype: "bf16" | "int8" | "fp32" (int8 reuses
+    # train/compression.quantize on a per-token, per-head grid).
+    kv_dtype: str
+    # Tokens per prefill chunk (prompts pad to a multiple of this; one trace).
+    prefill_chunk: int
+    # Serving context bound: block tables cover exactly this many positions.
+    max_seq_len: int
+    # Diagnostics (logged + dryrun records).
+    kv_bytes_per_token: int
+    hbm_kv_budget_bytes: int
+
+    @property
+    def max_concurrency(self) -> int:
+        """Requests the block pool can hold at full context length."""
+        return (self.n_blocks - 1) // self.max_blocks_per_seq
+
+    def describe(self) -> str:
+        return (
+            f"serve plan for {self.arch}: decode_batch={self.decode_batch} "
+            f"block_size={self.block_size} n_blocks={self.n_blocks} "
+            f"kv_dtype={self.kv_dtype} prefill_chunk={self.prefill_chunk} "
+            f"max_seq={self.max_seq_len} "
+            f"kv_bytes/token={self.kv_bytes_per_token}"
+        )
+
+    def to_record(self) -> dict:
+        """Flat dict for dryrun / benchmark JSON records."""
+        return {
+            "decode_batch": self.decode_batch,
+            "block_size": self.block_size,
+            "n_blocks": self.n_blocks,
+            "max_blocks_per_seq": self.max_blocks_per_seq,
+            "kv_dtype": self.kv_dtype,
+            "prefill_chunk": self.prefill_chunk,
+            "max_seq_len": self.max_seq_len,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+        }
+
+
+def serve_feasible(cfg) -> tuple[bool, str]:
+    """Can the continuous-batching engine host this arch?
+
+    The paged path needs per-slot positions (rope/none) and a pure-attention
+    layer stack (recurrent state is O(1)/request and needs no paging; those
+    archs stay on the eager ``greedy_generate`` path for now).
+    """
+    if cfg.enc_dec or cfg.frontend != "none":
+        return False, "enc-dec/frontend archs keep non-stack state"
+    if not all(k in ("attn", "swa", "local") for k in cfg.layer_pattern):
+        return False, f"layer pattern {cfg.layer_pattern} has recurrent blocks"
+    if cfg.pos_embedding not in ("rope", "none"):
+        return False, f"pos_embedding={cfg.pos_embedding} needs scalar offsets"
+    if not cfg.causal or cfg.encoder_only:
+        return False, "serving needs a causal decoder"
+    return True, ""
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def derive_serve_plan(
+    cfg,
+    mesh_shape: Mapping[str, int],
+    hw: HardwareSpec = DEFAULT_HARDWARE,
+    *,
+    max_seq_len: int = 2048,
+    decode_batch: Optional[int] = None,
+    block_size: Optional[int] = None,
+    kv_dtype: Optional[str] = None,
+    prefill_chunk: Optional[int] = None,
+    slack_blocks: int = 0,
+    oversubscribe: float = 1.0,
+) -> ServePlan:
+    """Pick decode batch / block size / KV dtype from the roofline model.
+
+    * **decode batch** — decode is weight-streaming-bound; batching tokens
+      amortizes the weight read until compute catches up at the machine
+      balance point (Eq.4 analog): B* ~= machine_balance x bytes/param / 2.
+      Capped by the HBM KV budget at full context.
+    * **KV dtype** — bf16 unless the bf16 pool cannot hold the
+      roofline-preferred batch at ``max_seq_len``; then the paper's Int8
+      deployment grid halves the page bytes (C2's precision knob applied to
+      the cache instead of the weights).
+    * **block size** — one MXU sublane tile (``mxu_dim // 8``) so a gathered
+      page feeds the MM PU without re-tiling; never wider than the context.
+
+    ``oversubscribe`` scales the block pool relative to the worst case
+    (every slot at ``max_seq_len``).  At the default 1.0 the pool can host
+    every admitted request to full context, so derived plans are
+    *eviction-free by construction* — the scheduler's eviction path only
+    engages when an operator oversubscribes (< 1.0) to trade KV memory for
+    admission capacity, betting that most requests stop early.
+    """
+    ok, reason = serve_feasible(cfg)
+    if not ok:
+        raise ValueError(f"no serve plan for {cfg.name}: {reason}")
+    ma = mesh_shape.get("model", 1)
+    n_attn = sum(
+        1 for i in range(cfg.n_layers) if cfg.layer_kind(i) in ("attn", "swa", "local")
+    )
+    weight_bytes = cfg.param_count() * 2.0 / max(ma, 1)
+    kv_budget = int(max(hw.hbm_bytes - weight_bytes, 0.1 * hw.hbm_bytes))
+
+    def per_token(dtype: str) -> int:
+        b = {"fp32": 4, "bf16": 2, "int8": 1}[dtype]
+        tok = n_attn * 2 * cfg.n_kv_heads * cfg.d_head * b
+        if dtype == "int8":  # per-(token, head) fp32 scale rides along
+            tok += n_attn * 2 * cfg.n_kv_heads * 4
+        return tok
+
+    # Roofline batch: tokens per step needed to amortize the weight stream.
+    ridge = max(1, int(hw.machine_balance_bf16 * 2.0 / (2.0 * max(ma, 1))))
+    if kv_dtype is None:
+        want = decode_batch or _pow2_floor(ridge)
+        fits_bf16 = want * max_seq_len * per_token("bf16") <= kv_budget
+        kv_dtype = "bf16" if fits_bf16 else "int8"
+    kv_tok = per_token(kv_dtype)
+    cap = max(1, kv_budget // max(max_seq_len * kv_tok, 1))
+    if decode_batch is None:
+        decode_batch = max(1, min(_pow2_floor(ridge), _pow2_floor(cap)))
+    if block_size is None:
+        block_size = max(8, hw.mxu_dim // 8)
+    block_size = min(block_size, max_seq_len)
+    max_blocks_per_seq = -(-max_seq_len // block_size)  # ceil
+    pool = max(max_blocks_per_seq, int(decode_batch * max_blocks_per_seq * oversubscribe))
+    n_blocks = 1 + pool + slack_blocks  # +1: block 0 is trash
+    if prefill_chunk is None:
+        prefill_chunk = min(max_seq_len, max(block_size, 256))
+    return ServePlan(
+        arch=cfg.name,
+        decode_batch=int(decode_batch),
+        block_size=int(block_size),
+        n_blocks=int(n_blocks),
+        max_blocks_per_seq=int(max_blocks_per_seq),
+        kv_dtype=kv_dtype,
+        prefill_chunk=int(prefill_chunk),
+        max_seq_len=int(max_seq_len),
+        kv_bytes_per_token=int(kv_tok),
+        hbm_kv_budget_bytes=kv_budget,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Paper §V.B design case, on the paper's own hardware numbers.
 # ---------------------------------------------------------------------------
 def design_case_vck5000(seq_len: int = 256, d_model: int = 768, d_ff: int = 3072,

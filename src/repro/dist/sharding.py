@@ -213,12 +213,21 @@ class Shardings:
     # ------------------------------------------------------------ decode cache
     def cache_spec(self, path: Sequence, leaf) -> P:
         """Decode-cache leaf spec: batch over data; KV heads over ``model``
-        when divisible, else the sequence dim (long-context serving)."""
+        when divisible, else the sequence dim (long-context serving).
+
+        Paged pool leaves (continuous batching) have no batch dim — blocks
+        are shared by every request — so only the KV-head dim shards (the
+        GSPMD-constrained serve path of the ROADMAP's SP decode item); the
+        block dim stays replicated because block ids are global."""
         names = _key_names(path)
         name = names[-1] if names else ""
         shape = tuple(leaf.shape)
         nd = len(shape)
         spec: list = [None] * nd
+        if "paged" in names:
+            if name in ("k", "v", "k_scale", "v_scale") and nd >= 4:
+                spec[-2] = "model"  # (..., n_blocks, block, KV, Dh/1)
+            return self._fit(P(*spec), shape)
         if "cross_kv" in names and nd >= 4:
             spec[-4] = "data"  # encoder memory kv: batch only
         elif name in ("k", "v") and nd >= 4:

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, applicable, get_config
 from repro.core.hardware import TPU_V5E
-from repro.core.plan import derive_plan
+from repro.core.plan import derive_plan, derive_serve_plan, serve_feasible
 from repro.core.roofline import analyze, analytic_memory_floor, model_flops_for
 from repro.dist.pipeline import bubble_fraction
 from repro.dist.sharding import Shardings
@@ -211,6 +211,20 @@ def run_cell(arch, shape, *, multi_pod, force=False, out_dir=RESULTS,
                         bubble_fraction(plan.microbatches, plan.pod_axis)
                         if plan.pod_role == "pipeline"
                         else 0.0
+                    ),
+                    # serving cells also record the derived serve knobs
+                    # (decode batch / block size / KV dtype) so the
+                    # plan->serve mapping is inspectable per mesh
+                    "serve": (
+                        derive_serve_plan(
+                            cfg,
+                            mesh_axes_dict(mesh),
+                            TPU_V5E,
+                            max_seq_len=shape.seq_len,
+                        ).to_record()
+                        if shape.kind in ("decode", "prefill")
+                        and serve_feasible(cfg)[0]
+                        else None
                     ),
                 },
                 **rep.to_dict(),

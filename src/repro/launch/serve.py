@@ -1,11 +1,24 @@
-"""Batched serving launcher (prefill + greedy decode).
+"""Serving launcher: continuous batching by default, eager lockstep as
+fallback.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-reduced \
-        --batch 4 --prompt-len 32 --gen 16
+    # continuous batching (paged KV cache, plan-derived knobs):
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        --requests 8 --prompt-len 32 --gen 16 --stagger 2
+
+    # eager whole-batch greedy decode (non-attention archs serve here):
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b-reduced \
+        --engine eager --batch 4 --prompt-len 32 --gen 16
+
+The batched path derives an :class:`ExecutionPlan` (mesh decisions) *and* a
+:class:`ServePlan` (decode batch / block size / KV dtype / prefill chunk)
+from the same (arch, mesh, hardware) triple, places params through
+``dist.Shardings`` so a model-sharded mesh serves correctly, and prints the
+plan + engine summary (tokens/s, batch occupancy) at the end.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -13,22 +26,42 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
-from repro.core.plan import derive_plan
+from repro.core.plan import derive_plan, derive_serve_plan, serve_feasible
+from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.params import init_params
-from repro.serve.engine import greedy_generate
+from repro.serve.engine import ServingEngine, greedy_generate
+from repro.serve.scheduler import random_stream
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    a = ap.parse_args()
+def run_batched(a, cfg, mesh) -> dict:
+    plan = derive_plan(
+        cfg, dict(mesh.shape), TPU_V5E,
+        batch=a.batch, seq_len=a.prompt_len, training=False,
+    )
+    serve = derive_serve_plan(
+        cfg, dict(mesh.shape), TPU_V5E,
+        max_seq_len=a.max_seq,
+        decode_batch=a.batch if a.fix_batch else None,
+        prefill_chunk=a.prefill_chunk,
+        kv_dtype=a.kv_dtype,
+    )
+    print(plan.describe())
+    print(serve.describe())
+    sh = Shardings(mesh, plan, cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    params = jax.device_put(params, sh.param_shardings(params))
+    engine = ServingEngine(params, cfg, plan, serve, shardings=sh)
+    reqs = random_stream(cfg, a.requests, a.prompt_len, a.gen, a.stagger, seed=1)
+    out = engine.run(reqs)
+    summary = engine.summary()
+    first = next(iter(out))
+    print(f"served {len(out)} requests; {first} -> {out[first]}")
+    print(json.dumps(summary, indent=1, default=str))
+    return summary
 
-    cfg = get_config(a.arch)
-    mesh = make_host_mesh()
+
+def run_eager(a, cfg, mesh) -> dict:
     plan = derive_plan(
         cfg, dict(mesh.shape), TPU_V5E,
         batch=a.batch, seq_len=a.prompt_len, training=False,
@@ -55,6 +88,37 @@ def main():
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({a.batch * a.gen / dt:.1f} tok/s)")
     print(out[0])
+    return {"tok_per_s": a.batch * a.gen / dt}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--engine", default="batched", choices=["batched", "eager"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="eager batch / batched decode slots (with --fix-batch)")
+    ap.add_argument("--fix-batch", action="store_true",
+                    help="pin decode_batch to --batch instead of deriving it")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="engine iterations between request arrivals")
+    ap.add_argument("--max-seq", type=int, default=2048)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=[None, "bf16", "int8", "fp32"])
+    a = ap.parse_args()
+
+    cfg = get_config(a.arch)
+    mesh = make_host_mesh()
+    if a.engine == "batched" and not serve_feasible(cfg)[0]:
+        print(f"{a.arch}: {serve_feasible(cfg)[1]}; falling back to --engine eager")
+        a.engine = "eager"
+    if a.engine == "batched":
+        run_batched(a, cfg, mesh)
+    else:
+        run_eager(a, cfg, mesh)
 
 
 if __name__ == "__main__":

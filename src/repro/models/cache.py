@@ -92,6 +92,122 @@ def init_cache(
     return cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (continuous-batching serving; docs/ARCHITECTURE.md §Serving).
+#
+# One shared pool of fixed-size blocks per attention layer; a request owns a
+# set of blocks through its block-table row (position p of slot b lives at
+# flat pool slot ``table[b, p // bs] * bs + p % bs``).  Block 0 is the trash
+# block — idle decode slots point their whole table at it, so the jitted step
+# keeps static shapes with no per-request branching.  The int8 page option
+# reuses ``train/compression.quantize`` on a per-(token, kv-head) grid (the
+# paper's Int8 deployment precision applied to the cache).
+# ---------------------------------------------------------------------------
+def _kv_vec_scale(x: jax.Array) -> jax.Array:
+    """Int8 grid per (token, kv-head) vector: max |x| over d_head / 127."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jnp.maximum(m, 1e-12) / 127.0
+
+
+def _paged_layer_entry(cfg: ArchConfig, serve) -> dict:
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    N, bs = serve.n_blocks, serve.block_size
+    if serve.kv_dtype == "int8":
+        return {
+            "paged": {
+                "k": jnp.zeros((N, bs, KV, Dh), jnp.int8),
+                "v": jnp.zeros((N, bs, KV, Dh), jnp.int8),
+                "k_scale": jnp.zeros((N, bs, KV, 1), jnp.float32),
+                "v_scale": jnp.zeros((N, bs, KV, 1), jnp.float32),
+            }
+        }
+    dt = {"bf16": jnp.bfloat16, "fp32": jnp.float32}[serve.kv_dtype]
+    return {
+        "paged": {
+            "k": jnp.zeros((N, bs, KV, Dh), dt),
+            "v": jnp.zeros((N, bs, KV, Dh), dt),
+        }
+    }
+
+
+def init_paged_cache(cfg: ArchConfig, plan: ExecutionPlan, serve) -> PyTree:
+    """Zero block pools mirroring the layer tree ({"stack": ..., "tail": ...}).
+
+    ``serve`` is a :class:`repro.core.plan.ServePlan`.  Only attention-kind
+    layers are supported (``serve_feasible`` gates the rest)."""
+    pattern = cfg.layer_pattern
+    n_full, rem = divmod(cfg.n_layers, len(pattern))
+    groups = [
+        tuple(_paged_layer_entry(cfg, serve) for _ in pattern) for _ in range(n_full)
+    ]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) if n_full else None
+    tail = tuple(_paged_layer_entry(cfg, serve) for _ in range(rem))
+    return {"layers": {"stack": stack, "tail": tail}}
+
+
+def paged_flat_slots(table: jax.Array, positions: jax.Array, block_size: int):
+    """Flat pool slots for ``positions`` (B, S) under block table (B, MB)."""
+    B = table.shape[0]
+    blk = table[jnp.arange(B)[:, None], positions // block_size]
+    return blk * block_size + positions % block_size
+
+
+def paged_update(
+    entry: dict, k: jax.Array, v: jax.Array, positions: jax.Array,
+    table: jax.Array, block_size: int,
+) -> dict:
+    """Write new (B, S, KV, Dh) keys/values at their slots; returns the entry.
+
+    Slot collisions only happen on the trash block (idle slots), where any
+    winner is fine — live requests own disjoint blocks by construction."""
+    from repro.train.compression import quantize
+
+    B, S = k.shape[:2]
+    flat = paged_flat_slots(table, positions, block_size).reshape(-1)
+
+    def put(pool, val):
+        fp = pool.reshape((-1,) + pool.shape[2:])
+        fp = fp.at[flat].set(val.reshape((B * S,) + val.shape[2:]).astype(fp.dtype))
+        return fp.reshape(pool.shape)
+
+    out = dict(entry)
+    if "k_scale" in entry:
+        qk, sk = quantize(k.astype(jnp.float32), "int8", _kv_vec_scale(k))
+        qv, sv = quantize(v.astype(jnp.float32), "int8", _kv_vec_scale(v))
+        out["k"] = put(entry["k"], qk)
+        out["v"] = put(entry["v"], qv)
+        out["k_scale"] = put(entry["k_scale"], sk)
+        out["v_scale"] = put(entry["v_scale"], sv)
+    else:
+        out["k"] = put(entry["k"], k)
+        out["v"] = put(entry["v"], v)
+    return out
+
+
+def paged_gather(entry: dict, table: jax.Array, block_size: int):
+    """Materialize each slot's pages in position order: (B, MB*bs, KV, Dh).
+
+    Key j of the gathered view sits at sequence position j, so the attention
+    mask is just ``j <= q_position`` — the block indirection vanishes here.
+    (Reference path; a fused Pallas paged-attention kernel would consume the
+    block table directly instead of gathering.)"""
+    from repro.train.compression import dequantize
+
+    MB = table.shape[1]
+    pos = jnp.arange(MB * block_size)
+    blk = table[:, pos // block_size]
+    flat = blk * block_size + pos % block_size  # (B, MB*bs)
+
+    def take(pool):
+        return pool.reshape((-1,) + pool.shape[2:])[flat]
+
+    k, v = take(entry["k"]), take(entry["v"])
+    if "k_scale" in entry:
+        k = dequantize(k, take(entry["k_scale"]), "int8")
+        v = dequantize(v, take(entry["v_scale"]), "int8")
+    return k, v
+
+
 def _kv_to_ring(k: jax.Array, v: jax.Array, Sc: int, dtype):
     """Place a prefill's (B,S,KV,D) kv into an Sc-slot cache at slot = pos % Sc."""
     B, S, KV, Dh = k.shape

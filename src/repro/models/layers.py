@@ -198,6 +198,47 @@ def decode_attention(
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    *,
+    window: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Attention against gathered KV pages with per-slot positions.
+
+    q: (B, S, H, D) — S is 1 for decode, the chunk width for chunked prefill.
+    k/v: (B, Skv, KH, D) page gather where key j sits at sequence position j
+    (``models/cache.paged_gather`` guarantees this).  q_positions: (B, S)
+    absolute positions, so every slot in a continuous batch masks by its own
+    length — the mask is ``j <= pos`` (+ window), never a shared scalar.
+    Serving oracle of the ATB; the batched-decode analogue of
+    ``decode_attention`` with the block indirection already resolved.
+    """
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, S, KH, G, D)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qr.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (B, KH, G, S, Skv)
+    j = jnp.arange(k.shape[1])
+    valid = j[None, None, :] <= q_positions[:, :, None]  # (B, S, Skv)
+    if window > 0:
+        valid &= (q_positions[:, :, None] - j[None, None, :]) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p / p.sum(axis=-1, keepdims=True),
+        v.astype(jnp.float32),
+    )
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, S, H, D).astype(q.dtype)
+
+
 def plain_cross_attention(
     q: jax.Array,
     k: jax.Array,

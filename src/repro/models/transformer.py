@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec
 
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan
+from repro.models import cache as C
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import rglru as G
@@ -62,6 +63,7 @@ def attention_stage(
     cache: Optional[dict],
     prefix_len: int,
     shard: Callable = Identity,
+    page_state: Optional[dict] = None,
 ):
     B, S, _ = h.shape
     H, Dh = cfg.n_heads, cfg.d_head
@@ -77,6 +79,19 @@ def attention_stage(
     q, k, v = shard(q, "act_heads"), shard(k, "act_kv"), shard(v, "act_kv")
 
     new_cache = None
+    if cache is not None and "paged" in cache:
+        # Continuous-batching serve path: write this step's KV into the
+        # block pool at each slot's own positions, then attend against the
+        # gathered pages with per-slot masks (prefill chunks and batched
+        # decode are the same code — only S differs).
+        bs = page_state["block_size"]
+        table = page_state["table"]
+        pos2d = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
+        entry = C.paged_update(cache["paged"], k, v, pos2d, table, bs)
+        kf, vf = C.paged_gather(entry, table, bs)
+        o = L.paged_attention(q, kf, vf, pos2d, window=window)
+        out = shard(o.reshape(B, S, H * Dh), "act_heads_flat") @ ap["wo"]
+        return out, {"paged": entry}, None
     if cache is None:
         o = L.blocked_attention(
             q, k, v,
@@ -134,6 +149,7 @@ def edpu_layer(
     causal_override: Optional[bool] = None,
     collect: bool = False,
     shard: Callable = Identity,
+    page_state: Optional[dict] = None,
 ):
     """One Encoder/Decoder layer: MHA Stage -> (cross) -> FFN Stage.
 
@@ -151,14 +167,20 @@ def edpu_layer(
     # ---- MHA Stage ---------------------------------------------------------
     h = L.apply_norm(lp["attn"]["ln"], x, cfg.norm)
     if kind in ("attn", "swa", "local"):
+        ac = None
+        if cache is not None:
+            ac = cache if "paged" in cache else cache.get("attn")
         a, nc, kv_out = attention_stage(
             lp["attn"], h,
             cfg=run_cfg, plan=plan, kind=kind, positions=positions,
-            cache=None if cache is None else cache.get("attn"),
-            prefix_len=prefix_len, shard=shard,
+            cache=ac, prefix_len=prefix_len, shard=shard,
+            page_state=page_state,
         )
         if nc is not None:
-            new_cache["attn"] = nc
+            if "paged" in nc:
+                new_cache["paged"] = nc["paged"]  # keep the pool tree shape
+            else:
+                new_cache["attn"] = nc
         if cache is None and collect and kv_out is not None:
             new_cache["kv_out"] = kv_out  # harvested by prefill
     elif kind == "rglru":
@@ -413,7 +435,9 @@ def _embed_inputs(params: PyTree, batch: dict, cfg: ArchConfig, cache, dtype):
     S = x.shape[1]
 
     t0 = 0 if cache is None else cache["t"]
-    positions = t0 + jnp.arange(S)[None, :]
+    # Per-slot offsets (continuous batching hands a (B,) length vector).
+    off = t0[:, None] if getattr(t0, "ndim", 0) == 1 else t0
+    positions = off + jnp.arange(S)[None, :]
     if cfg.pos_embedding == "learned":
         x = x + params["pos"].astype(dtype)[None, :S] if cache is None else (
             x + lax.dynamic_slice_in_dim(params["pos"].astype(dtype), t0, 1)[None]
@@ -439,6 +463,7 @@ def forward(
     collect_cache: bool = False,
     shard: Callable = Identity,
     mesh=None,
+    page_state: Optional[dict] = None,
 ):
     """Full model forward.
 
@@ -449,6 +474,11 @@ def forward(
     With ``plan.seq_parallel_acts`` and a real ``mesh``, the stacked
     layer-groups run through the Megatron-SP manual-collective path
     (:func:`sp_stack_forward`); everything else stays on the GSPMD path.
+
+    With a *paged* ``cache`` (``models/cache.init_paged_cache``) and
+    ``page_state={"table": (B, MB) int32, "block_size": int}``, the pass is a
+    continuous-batching serve step: ``cache["t"]`` is a per-slot (B,) length
+    vector and S may be a prefill chunk width (>= 1).
     """
     dtype = _weight_dtype(params)
     x, positions, prefix_len = _embed_inputs(params, batch, cfg, cache, dtype)
@@ -484,7 +514,7 @@ def forward(
             lp, xx, cfg=cfg, plan=plan, kind=kind, positions=positions,
             cache=c, memory=memory, prefix_len=prefix_len,
             causal_override=False if cfg.encoder_only else None,
-            collect=collect_cache, shard=shard,
+            collect=collect_cache, shard=shard, page_state=page_state,
         )
 
     layer_caches = None if cache is None else cache["layers"]

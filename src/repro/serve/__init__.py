@@ -1,0 +1,18 @@
+from repro.serve.engine import (
+    ServingEngine,
+    greedy_generate,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.serve.scheduler import BlockAllocator, Request, Scheduler, random_stream
+
+__all__ = [
+    "ServingEngine",
+    "greedy_generate",
+    "make_decode_step",
+    "make_prefill_step",
+    "BlockAllocator",
+    "Request",
+    "Scheduler",
+    "random_stream",
+]

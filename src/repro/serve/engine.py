@@ -1,21 +1,33 @@
-"""Serving: prefill + batched decode.
+"""Serving: the continuous-batching engine + the eager prefill/decode steps.
 
-``make_prefill_step`` runs the parallel forward with cache collection and
-returns last-position logits (what a server samples from); ``make_decode_step``
-advances one token for the whole batch against the cache.  The dry-run lowers
-these for the decode_32k / long_500k / prefill_32k cells.
+Two layers:
+
+* ``make_prefill_step`` / ``make_decode_step`` / ``greedy_generate`` — the
+  eager whole-batch path (dense cache, every request in lockstep).  The
+  dry-run lowers these for the decode_32k / long_500k / prefill_32k cells
+  and non-attention archs (RWKV/RG-LRU/enc-dec) serve through it.
+* ``ServingEngine`` — continuous batching over the paged KV cache
+  (``models/cache.init_paged_cache``): a fixed grid of decode slots, chunked
+  prefill interleaved with batched decode, both as static-shape jitted steps
+  so request churn never retraces.  Scheduling policy lives host-side in
+  ``serve/scheduler.py``; the knobs (decode batch, block size, KV dtype,
+  prefill chunk) come from ``core/plan.derive_serve_plan``.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.core.plan import ExecutionPlan
-from repro.models.cache import cache_from_prefill
+from repro.core.plan import ExecutionPlan, ServePlan, serve_feasible
+from repro.models.cache import cache_from_prefill, init_paged_cache
 from repro.models.transformer import forward, logits_fn
+from repro.serve.scheduler import Request, Scheduler
 
 PyTree = Any
 Identity = lambda x, name=None: x
@@ -51,6 +63,7 @@ def greedy_generate(
     n_steps: int,
     cache_len: int,
     shard: Callable = Identity,
+    cache_dtype=jnp.bfloat16,
 ):
     """Eager helper for the examples/tests (prefill then greedy decode).
 
@@ -59,7 +72,7 @@ def greedy_generate(
     prefill = make_prefill_step(cfg, plan, shard=shard)
     decode = jax.jit(make_decode_step(cfg, plan, shard=shard))
     logits, pc = prefill(params, batch)
-    cache = cache_from_prefill(cfg, plan, pc, cache_len)
+    cache = cache_from_prefill(cfg, plan, pc, cache_len, dtype=cache_dtype)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     out = [tok]
     for _ in range(n_steps - 1):
@@ -67,3 +80,158 @@ def greedy_generate(
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+class ServingEngine:
+    """Continuous-batching serving over the paged KV cache.
+
+    Exactly two jitted device programs, both with static shapes:
+
+    * ``prefill_step(params, pools, tokens (1,C), table_row, start, last_idx)``
+      — one prompt chunk for one slot, writing its pages into the shared
+      pool; on the final chunk ``last_idx`` points at the true last prompt
+      token and the returned greedy token is the request's first output.
+    * ``decode_step(params, pools, tokens (B,1), tables, lens)`` — one token
+      for every slot at once; idle slots point at the trash block and cost
+      one lane of the batch (their output is discarded).
+
+    The scheduler interleaves them per iteration: admit, (maybe) one prefill
+    chunk, one batched decode.  ``trace_counts`` proves there is no
+    per-request retracing — it stays at 1/1 however the stream churns.
+    """
+
+    def __init__(
+        self,
+        params: PyTree,
+        cfg: ArchConfig,
+        plan: ExecutionPlan,
+        serve: ServePlan,
+        *,
+        shardings=None,
+    ):
+        ok, reason = serve_feasible(cfg)
+        if not ok:
+            raise ValueError(f"{cfg.name} cannot serve continuously: {reason}")
+        self.cfg, self.plan, self.serve = cfg, plan, serve
+        self.sched = Scheduler(serve)
+        self.params = params
+        self.pools = init_paged_cache(cfg, plan, serve)
+        if shardings is not None:
+            self.pools = jax.device_put(
+                self.pools, shardings.cache_shardings(self.pools)
+            )
+        shard = shardings.constrain if shardings is not None else Identity
+        self.trace_counts = {"prefill": 0, "decode": 0}
+        self.iteration = 0
+        self.stats = {
+            "prefill_steps": 0, "decode_steps": 0, "prefill_tokens": 0,
+            "decode_tokens": 0, "occupancy_sum": 0.0,
+        }
+        bs = serve.block_size
+
+        def prefill_fn(params, pools, tokens, table_row, start, last_idx):
+            self.trace_counts["prefill"] += 1
+            cache = {"layers": pools["layers"], "t": start}
+            x, nc, _ = forward(
+                params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
+                shard=shard, page_state={"table": table_row, "block_size": bs},
+            )
+            xl = lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+            tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
+            return tok, {"layers": nc["layers"]}
+
+        def decode_fn(params, pools, tokens, tables, lens):
+            self.trace_counts["decode"] += 1
+            cache = {"layers": pools["layers"], "t": lens}
+            x, nc, _ = forward(
+                params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
+                shard=shard, page_state={"table": tables, "block_size": bs},
+            )
+            tok = jnp.argmax(logits_fn(params, x, cfg)[:, -1], axis=-1)
+            return tok, {"layers": nc["layers"]}
+
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def reset_stats(self) -> None:
+        """Zero the throughput counters and the iteration clock (e.g. after a
+        jit-warmup stream) — request arrivals are absolute iterations, so the
+        clock must restart or a post-warmup 'staggered' stream arrives as a
+        burst.  Compiled step caches and pool contents are left alone."""
+        for k in self.stats:
+            self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
+        self.stats.pop("wall_s", None)
+        self.iteration = 0
+
+    def step(self) -> None:
+        """One engine iteration: admit -> one prefill chunk -> batched decode."""
+        s = self.sched
+        s.admit(self.iteration)
+        req = s.next_prefill()
+        if req is not None:
+            c = self.serve.prefill_chunk
+            chunk = req.prompt[req.pos : req.pos + c]
+            tokens = np.zeros((1, c), np.int32)
+            tokens[0, : len(chunk)] = chunk
+            is_last = req.pos + c >= len(req.prompt)
+            last_idx = np.int32(len(req.prompt) - 1 - req.pos if is_last else 0)
+            tok, self.pools = self._prefill(
+                self.params, self.pools, tokens,
+                s.table[req.slot : req.slot + 1],
+                np.asarray([req.pos], np.int32), last_idx,
+            )
+            s.prefill_chunk_done(req, int(tok[0]) if is_last else None)
+            self.stats["prefill_steps"] += 1
+            self.stats["prefill_tokens"] += len(chunk)
+        if s.running():
+            s.grow_for_decode()
+            n_active = len(s.running())
+            tables, lens = s.decode_view()
+            sampled, self.pools = self._decode(
+                self.params, self.pools, s.last_tokens()[:, None], tables, lens,
+            )
+            s.decode_done(np.asarray(sampled))
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += n_active
+            self.stats["occupancy_sum"] += n_active / self.serve.decode_batch
+        self.iteration += 1
+
+    def run(self, requests=(), max_iterations: int = 100_000) -> dict:
+        """Drive the stream to completion; returns {rid: generated tokens}."""
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while not self.sched.idle and self.iteration < max_iterations:
+            self.step()
+        self.stats["wall_s"] = time.perf_counter() - t0
+        if not self.sched.idle:
+            raise RuntimeError(f"stream not drained after {max_iterations} iters")
+        return {r.rid: list(r.out) for r in self.sched.finished}
+
+    def summary(self) -> dict:
+        d = max(self.stats["decode_steps"], 1)
+        return {
+            "iterations": self.iteration,
+            "prefill_steps": self.stats["prefill_steps"],
+            "decode_steps": self.stats["decode_steps"],
+            "prefill_tokens": self.stats["prefill_tokens"],
+            "decode_tokens": self.stats["decode_tokens"],
+            "mean_occupancy": self.stats["occupancy_sum"] / d,
+            "evictions": self.sched.n_evictions,
+            "traces": dict(self.trace_counts),
+            "wall_s": self.stats.get("wall_s"),
+            "tok_per_s": (
+                (self.stats["prefill_tokens"] + self.stats["decode_tokens"])
+                / self.stats["wall_s"]
+                if self.stats.get("wall_s")
+                else None
+            ),
+            "serve_plan": self.serve.to_record(),
+        }

@@ -1,0 +1,294 @@
+"""Continuous-batching scheduler (host side).
+
+The device side of serving is two static-shape jitted steps (one prefill
+chunk, one batched decode — ``serve/engine.py``); everything dynamic lives
+here as plain Python: request admission, block accounting, chunked-prefill
+interleaving, completion and eviction.  The scheduler owns the block tables
+and per-slot lengths as numpy arrays and hands device copies to each step,
+so no step ever retraces on request churn.
+
+Policy (Orca-style iteration-level scheduling):
+
+* **admission** — FCFS by arrival; a waiting request is admitted when a
+  decode slot is free and the pool can cover its padded prompt.
+* **prefill** — one ``serve_plan.prefill_chunk``-wide chunk per engine
+  iteration for the oldest admitted-but-unfinished request, interleaved
+  with the batched decode so decode latency stays bounded.
+* **growth/eviction** — decode slots grow their block list lazily, one
+  block at a time; when the pool is exhausted the *youngest* running
+  request is evicted back to the waiting queue (recompute-style preemption,
+  its blocks freed for the older requests).
+* **completion** — a slot that reaches ``max_new_tokens`` frees its blocks
+  and the slot is immediately reusable (padding-free slot reuse: the other
+  slots never see it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.plan import ServePlan
+
+WAITING, PREFILL, RUNNING, DONE = "waiting", "prefill", "running", "done"
+
+
+def random_stream(
+    cfg,
+    n_requests: int,
+    prompt_len,
+    gen: int,
+    stagger: int = 0,
+    seed: int = 0,
+    rid_prefix: str = "req",
+) -> list["Request"]:
+    """Synthetic staggered request stream (launcher, benchmarks, examples all
+    share this so they exercise the same arrival semantics).
+
+    ``prompt_len`` is an int for fixed-length prompts or an (lo, hi) tuple
+    for mixed lengths drawn uniformly."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        n = (
+            int(rng.integers(prompt_len[0], prompt_len[1]))
+            if isinstance(prompt_len, tuple)
+            else prompt_len
+        )
+        reqs.append(
+            Request(
+                rid=f"{rid_prefix}{i:03d}",
+                prompt=list(rng.integers(0, cfg.vocab_size, n)),
+                max_new_tokens=gen,
+                arrival=i * stagger,
+            )
+        )
+    return reqs
+
+
+class BlockAllocator:
+    """Free-list allocator over the shared block pool.
+
+    Block 0 is reserved as the trash block (idle decode slots write there),
+    so ids 1..n_blocks-1 are allocatable.  Freed blocks return to the pool
+    and are handed out again (wraparound) — stale page contents are simply
+    overwritten by the next owner's writes.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need at least one allocatable block + trash")
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, 0, -1))  # pop() yields 1 first
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """n blocks, or None when the pool cannot host them (caller evicts)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if not 0 < b < self.n_blocks:
+                raise ValueError(f"block {b} out of range")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt: list[int]
+    max_new_tokens: int
+    arrival: int = 0  # engine iteration at which the request becomes visible
+    # -- scheduler-owned state --
+    state: str = WAITING
+    slot: int = -1
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    pos: int = 0  # prompt tokens prefilled so far
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new_tokens
+
+
+class Scheduler:
+    """Owns slots, block tables and the request queues for one engine."""
+
+    def __init__(self, serve: ServePlan):
+        self.serve = serve
+        self.alloc = BlockAllocator(serve.n_blocks)
+        self.table = np.zeros(
+            (serve.decode_batch, serve.max_blocks_per_seq), np.int32
+        )  # all-trash until a slot is owned
+        self.lens = np.zeros((serve.decode_batch,), np.int32)
+        self.slots: list[Optional[Request]] = [None] * serve.decode_batch
+        self.waiting: list[Request] = []
+        self.finished: list[Request] = []
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------- helpers
+    def padded_prompt_len(self, req: Request) -> int:
+        c = self.serve.prefill_chunk
+        return -(-len(req.prompt) // c) * c
+
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.serve.block_size)
+
+    def submit(self, req: Request) -> None:
+        limit = self.serve.max_blocks_per_seq * self.serve.block_size
+        if self.padded_prompt_len(req) + req.max_new_tokens > limit:
+            raise ValueError(
+                f"request {req.rid}: padded prompt {self.padded_prompt_len(req)}"
+                f" + {req.max_new_tokens} new tokens exceeds max_seq {limit}"
+            )
+        self.waiting.append(req)
+
+    # ----------------------------------------------------------- admission
+    def admit(self, iteration: int) -> None:
+        """FCFS: move waiting requests into free slots while blocks last."""
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+        for req in list(self.waiting):
+            if req.arrival > iteration:
+                continue
+            slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if slot is None:
+                return
+            blocks = self.alloc.alloc(self._blocks_for(self.padded_prompt_len(req)))
+            if blocks is None:
+                return  # pool full: keep FCFS order, try next iteration
+            self.waiting.remove(req)
+            req.state, req.slot, req.blocks, req.pos, req.out = (
+                PREFILL, slot, blocks, 0, [],
+            )
+            self.slots[slot] = req
+            self.table[slot] = 0
+            self.table[slot, : len(blocks)] = blocks
+            self.lens[slot] = 0
+
+    # ------------------------------------------------------------- prefill
+    def next_prefill(self) -> Optional[Request]:
+        """Oldest admitted request that still has prompt tokens to prefill."""
+        cands = [s for s in self.slots if s is not None and s.state == PREFILL]
+        cands.sort(key=lambda r: (r.arrival, r.rid))
+        return cands[0] if cands else None
+
+    def prefill_chunk_done(self, req: Request, first_token: Optional[int]) -> None:
+        """Advance ``req.pos`` one chunk; on the final chunk record the first
+        sampled token and flip the slot to RUNNING (visible to decode)."""
+        req.pos = min(req.pos + self.serve.prefill_chunk, len(req.prompt))
+        if req.pos >= len(req.prompt):
+            assert first_token is not None
+            req.out.append(int(first_token))
+            req.state = RUNNING
+            self.lens[req.slot] = len(req.prompt)
+
+    # -------------------------------------------------------------- decode
+    def running(self) -> list[Request]:
+        return [s for s in self.slots if s is not None and s.state == RUNNING]
+
+    def _active(self) -> list[Request]:
+        """Slot holders that own blocks (running *or* mid-prefill) — the
+        eviction candidate pool."""
+        return [
+            s for s in self.slots if s is not None and s.state in (PREFILL, RUNNING)
+        ]
+
+    def grow_for_decode(self) -> None:
+        """Ensure every running slot has a block for the position it is
+        about to write; when the pool runs dry a requester may only evict
+        runners strictly *younger* than itself — if there is none it
+        preempts itself instead.  The oldest request therefore always keeps
+        its pages and finishes (no eviction livelock)."""
+        for req in sorted(self.running(), key=lambda r: (r.arrival, r.rid)):
+            if req.state != RUNNING:  # evicted as a victim earlier in this loop
+                continue
+            need = self._blocks_for(int(self.lens[req.slot]) + 1) - len(req.blocks)
+            while need > 0:
+                got = self.alloc.alloc(need)
+                if got is not None:
+                    start = len(req.blocks)
+                    req.blocks.extend(got)
+                    self.table[req.slot, start : len(req.blocks)] = got
+                    need = 0
+                    break
+                victims = sorted(
+                    self._active(), key=lambda r: (r.arrival, r.rid), reverse=True
+                )
+                victim = next(
+                    (
+                        v for v in victims
+                        if v is not req and (v.arrival, v.rid) > (req.arrival, req.rid)
+                    ),
+                    None,
+                )
+                if victim is None:
+                    if len(self._active()) == 1:
+                        raise RuntimeError(
+                            "KV pool exhausted by a single request; "
+                            "raise n_blocks or lower max_new_tokens"
+                        )
+                    self.evict(req)  # yield to the elders
+                    break
+                self.evict(victim)
+
+    def evict(self, req: Request) -> None:
+        """Recompute-style preemption: back to the waiting queue from scratch."""
+        self._release(req)
+        req.state, req.pos, req.out = WAITING, 0, []
+        self.waiting.append(req)
+        self.n_evictions += 1
+
+    def decode_done(self, sampled: np.ndarray) -> None:
+        """Consume one decode step's sampled tokens ((decode_batch,) int)."""
+        for req in self.running():
+            self.lens[req.slot] += 1
+            req.out.append(int(sampled[req.slot]))
+            if req.done:
+                req.state = DONE
+                self._release(req)
+                self.finished.append(req)
+
+    def _release(self, req: Request) -> None:
+        self.alloc.free(req.blocks)
+        req.blocks = []
+        if req.slot >= 0:
+            self.table[req.slot] = 0
+            self.lens[req.slot] = 0
+            self.slots[req.slot] = None
+            req.slot = -1
+
+    # ------------------------------------------------------------- queries
+    def last_tokens(self) -> np.ndarray:
+        """Per-slot token to feed the next decode step (0 for idle slots)."""
+        toks = np.zeros((self.serve.decode_batch,), np.int32)
+        for req in self.running():
+            toks[req.slot] = req.out[-1]
+        return toks
+
+    def decode_view(self) -> tuple[np.ndarray, np.ndarray]:
+        """(table, lens) as the decode step must see them: rows of slots that
+        are idle *or still prefilling* point at the trash block, so the
+        batched write of their dummy token can never land in pages a
+        mid-prefill request already owns."""
+        mask = np.zeros((self.serve.decode_batch,), bool)
+        for req in self.running():
+            mask[req.slot] = True
+        return np.where(mask[:, None], self.table, 0), np.where(mask, self.lens, 0)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.running()) / self.serve.decode_batch
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and all(s is None for s in self.slots)

@@ -1,0 +1,206 @@
+"""Paged KV cache: block allocator, pool write/gather, int8 round-trip."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import derive_plan, derive_serve_plan
+from repro.models.cache import (
+    init_paged_cache,
+    paged_flat_slots,
+    paged_gather,
+    paged_update,
+)
+from repro.serve.scheduler import BlockAllocator, Request, Scheduler
+
+MESH1 = {"data": 1, "model": 1}
+
+
+def _serve(cfg, **kw):
+    kw.setdefault("max_seq_len", 32)
+    kw.setdefault("decode_batch", 2)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("kv_dtype", "fp32")
+    kw.setdefault("prefill_chunk", 4)
+    return derive_serve_plan(cfg, MESH1, **kw)
+
+
+# ---------------------------------------------------------------- allocator
+def test_allocator_alloc_free_wraparound():
+    a = BlockAllocator(6)  # blocks 1..5 allocatable, 0 is trash
+    assert a.available == 5
+    got = a.alloc(3)
+    assert sorted(got) == [1, 2, 3]
+    assert a.alloc(3) is None  # only 2 left
+    a.free(got)
+    assert a.available == 5
+    # wraparound: freed ids come back out
+    again = a.alloc(5)
+    assert sorted(again) == [1, 2, 3, 4, 5]
+    a.free(again)
+
+
+def test_allocator_rejects_bad_frees():
+    a = BlockAllocator(4)
+    blocks = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.free([0])  # trash block is never allocatable
+    with pytest.raises(ValueError):
+        a.free([9])
+    a.free(blocks)
+    with pytest.raises(ValueError):
+        a.free([blocks[0]])  # double free
+
+
+# ------------------------------------------------------------------- pools
+def test_paged_write_gather_round_trip(key):
+    cfg = get_config("smollm-135m").reduced()
+    plan = derive_plan(cfg, MESH1, batch=2, seq_len=8, training=False)
+    serve = _serve(cfg)
+    pools = init_paged_cache(cfg, plan, serve)
+    # stack: tuple over the layer pattern, leaves stacked (n_groups, N, ...)
+    e0 = jax.tree.map(lambda x: x[0], pools["layers"]["stack"][0])["paged"]
+
+    B, S, KV, Dh = 2, 6, cfg.n_kv_heads, cfg.d_head
+    k = jax.random.normal(key, (B, S, KV, Dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, Dh), jnp.float32)
+    # slot 0 owns blocks 1,2; slot 1 owns blocks 3,4
+    table = jnp.array([[1, 2, 0, 0, 0, 0, 0, 0], [3, 4, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    e0 = paged_update(e0, k, v, pos, table, serve.block_size)
+    kf, vf = paged_gather(e0, table, serve.block_size)
+    np.testing.assert_allclose(np.asarray(kf[:, :S]), np.asarray(k), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(vf[:, :S]), np.asarray(v), rtol=1e-6)
+
+    # block reuse (wraparound): slot 1's blocks handed to a new request on
+    # slot 0 — fresh writes must fully shadow the stale pages
+    table2 = jnp.array([[3, 4, 0, 0, 0, 0, 0, 0], [0, 0, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    k2 = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, Dh), jnp.float32)
+    e0 = paged_update(e0, k2, v, pos, table2, serve.block_size)
+    kf2, _ = paged_gather(e0, table2, serve.block_size)
+    np.testing.assert_allclose(np.asarray(kf2[0, :S]), np.asarray(k2[0]), rtol=1e-6)
+
+
+def test_paged_flat_slots_mapping():
+    table = jnp.array([[5, 9], [7, 2]], jnp.int32)
+    pos = jnp.array([[0, 3, 4], [1, 5, 7]], jnp.int32)  # block_size 4
+    got = np.asarray(paged_flat_slots(table, pos, 4))
+    assert got.tolist() == [[20, 23, 36], [29, 9, 11]]
+
+
+def test_int8_kv_round_trip_tolerance(key):
+    cfg = get_config("smollm-135m").reduced()
+    plan = derive_plan(cfg, MESH1, batch=2, seq_len=8, training=False)
+    serve = _serve(cfg, kv_dtype="int8")
+    pools = init_paged_cache(cfg, plan, serve)
+    e0 = jax.tree.map(lambda x: x[0], pools["layers"]["stack"][0])["paged"]
+    assert e0["k"].dtype == jnp.int8 and "k_scale" in e0
+
+    B, S, KV, Dh = 1, 8, cfg.n_kv_heads, cfg.d_head
+    k = 3.0 * jax.random.normal(key, (B, S, KV, Dh), jnp.float32)
+    v = 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (B, S, KV, Dh), jnp.float32)
+    table = jnp.array([[1, 2, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    pos = jnp.arange(S)[None]
+    e0 = paged_update(e0, k, v, pos, table, serve.block_size)
+    kf, vf = paged_gather(e0, table, serve.block_size)
+    # per-(token, head) grid: worst case half a quantization step of the
+    # vector max => ~0.5/127 relative to each vector's own scale
+    for got, want in ((kf[:, :S], k), (vf[:, :S], v)):
+        scale = np.abs(np.asarray(want)).max(axis=-1, keepdims=True)
+        err = np.abs(np.asarray(got) - np.asarray(want)) / (scale + 1e-12)
+        assert err.max() < 1.0 / 127.0, err.max()
+
+
+# --------------------------------------------------------------- scheduler
+def test_scheduler_eviction_and_recovery():
+    """Pool too small for both runners: youngest is evicted (recompute
+    preemption), re-admitted after the elder finishes, stream still drains."""
+    cfg = get_config("smollm-135m").reduced()
+    serve = _serve(cfg, decode_batch=2, block_size=2, prefill_chunk=4, max_seq_len=16)
+    serve = dataclasses.replace(serve, n_blocks=1 + 8)  # 8 allocatable blocks
+    s = Scheduler(serve)
+    r0 = Request(rid="a", prompt=[1, 2, 3, 4], max_new_tokens=9)
+    r1 = Request(rid="b", prompt=[5, 6, 7, 8], max_new_tokens=9)
+    s.submit(r0)
+    s.submit(r1)
+    s.admit(0)
+    assert {r0.state, r1.state} == {"prefill"}
+    for r in (r0, r1):
+        s.prefill_chunk_done(r, first_token=11)
+    evicted = False
+    for _ in range(30):
+        if not s.running():
+            s.admit(99)
+            for r in s.slots:
+                if r is not None and r.state == "prefill":
+                    s.prefill_chunk_done(r, first_token=11)
+            if not s.running():
+                break
+        s.grow_for_decode()
+        evicted = evicted or s.n_evictions > 0
+        s.decode_done(np.full((serve.decode_batch,), 7, np.int64))
+    assert evicted and s.n_evictions >= 1
+    assert {len(r.out) for r in (r0, r1)} == {9}
+    assert r0.state == "done" and r1.state == "done"
+    assert s.alloc.available == 8  # everything returned to the pool
+
+
+def test_grow_preempts_mid_prefill_holder_instead_of_crashing():
+    """Oversubscribed pool, one runner + one mid-prefill block holder: the
+    runner must preempt the younger prefill slot, not raise pool-exhausted
+    (regression: victims used to be drawn from running() only)."""
+    cfg = get_config("smollm-135m").reduced()
+    serve = _serve(cfg, decode_batch=2, block_size=2, prefill_chunk=4, max_seq_len=16)
+    serve = dataclasses.replace(serve, n_blocks=1 + 7)
+    s = Scheduler(serve)
+    r0 = Request(rid="a", prompt=[1, 2, 3, 4], max_new_tokens=8)
+    r1 = Request(rid="b", prompt=[5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=2)
+    s.submit(r0)
+    s.submit(r1)
+    s.admit(0)  # r0: 2 blocks, r1: 4 blocks (padded prompt), 1 free
+    s.prefill_chunk_done(r0, first_token=3)  # r0 RUNNING
+    s.prefill_chunk_done(r1, None)  # r1 mid-prefill, holding its blocks
+    for _ in range(4):  # r0 decodes until the pool runs dry
+        s.grow_for_decode()
+        s.decode_done(np.full((serve.decode_batch,), 7, np.int64))
+    assert s.n_evictions == 1
+    assert r1.state == "waiting" and not r1.blocks
+    assert r0.state == "running" and len(r0.out) == 5
+
+
+def test_decode_view_shields_mid_prefill_slots():
+    """The batched decode writes a dummy token for every non-running slot;
+    those writes must land in the trash block, never in pages a mid-prefill
+    request already owns (regression: decode between two prefill chunks used
+    to overwrite the request's position 0)."""
+    cfg = get_config("smollm-135m").reduced()
+    serve = _serve(cfg, decode_batch=2, block_size=4, prefill_chunk=4, max_seq_len=32)
+    s = Scheduler(serve)
+    r0 = Request(rid="run", prompt=[1, 2, 3, 4], max_new_tokens=4)
+    r1 = Request(rid="pre", prompt=[5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=4)
+    s.submit(r0)
+    s.submit(r1)
+    s.admit(0)
+    s.prefill_chunk_done(r0, first_token=3)  # r0 RUNNING
+    s.prefill_chunk_done(r1, None)  # r1 half prefilled (pos 4 of 8)
+    assert r1.state == "prefill" and r1.blocks
+    table, lens = s.decode_view()
+    assert table[r0.slot].tolist() == s.table[r0.slot].tolist()
+    assert table[r1.slot].tolist() == [0] * serve.max_blocks_per_seq
+    assert lens[r1.slot] == 0
+    # the dummy write for r1's slot resolves to the trash block, not its pages
+    flat = paged_flat_slots(
+        jnp.asarray(table), jnp.asarray(lens)[:, None], serve.block_size
+    )
+    assert int(flat[r1.slot, 0]) < serve.block_size  # trash block extent
+    assert all(int(flat[r1.slot, 0]) // serve.block_size != b for b in r1.blocks)
+
+
+def test_scheduler_rejects_oversized_request():
+    cfg = get_config("smollm-135m").reduced()
+    s = Scheduler(_serve(cfg, max_seq_len=16, prefill_chunk=4, block_size=4))
+    with pytest.raises(ValueError):
+        s.submit(Request(rid="x", prompt=list(range(14)), max_new_tokens=8))
