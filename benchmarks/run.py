@@ -8,6 +8,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         fig5_batch_sweep,
+        paged_attn_bench,
         serve_sweep,
         table2_parallel_modes,
         table5_utilization,
@@ -24,6 +25,7 @@ def main() -> None:
         table7_comparison,
         fig5_batch_sweep,
         serve_sweep,
+        paged_attn_bench,
     ):
         try:
             mod.run()

@@ -43,10 +43,14 @@ def _drive(cfg, decode_batch, *, n_requests=8, prompt_len=32, gen=16, stagger=2,
         max_seq_len=max(64, prompt_len + gen),
         decode_batch=decode_batch,
         prefill_chunk=prompt_len,
+        # narrow slab for the CPU smoke: prompt-width rows would make every
+        # decode-phase step pay (W-1) dead rows per slot (the explicit
+        # slab-width trade; docs/ARCHITECTURE.md §Serving)
+        mixed_slab_width=min(prompt_len, 8),
     )
     params = init_params(jax.random.PRNGKey(seed), cfg, plan, dtype=jnp.float32)
     engine = ServingEngine(params, cfg, plan, serve)
-    # warm the two jitted steps on a throwaway request so the measured
+    # warm the unified jitted step on a throwaway request so the measured
     # stream times serving, not XLA compilation
     engine.run(random_stream(cfg, 1, prompt_len, 2, seed=99, rid_prefix="warm"))
     engine.reset_stats()
@@ -66,8 +70,8 @@ def serving_smoke(arch: str = "smollm-135m", out: str = "BENCH_serve.json") -> d
         "tokens_per_s": s["tok_per_s"],
         "decode_tokens": s["decode_tokens"],
         "prefill_tokens": s["prefill_tokens"],
-        "decode_steps": s["decode_steps"],
-        "prefill_steps": s["prefill_steps"],
+        "steps": s["steps"],
+        "fused_attention": s["fused_attention"],
         "mean_occupancy": s["mean_occupancy"],
         "evictions": s["evictions"],
         "traces": s["traces"],

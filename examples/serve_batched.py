@@ -8,8 +8,8 @@ replicated), and the jitted decode runs under the plan's activation
 constraints.
 
 Part 2 serves a *staggered* request stream through the continuous-batching
-engine (paged KV cache + prefill/decode scheduler) on the same sharded
-mesh — mixed prompt lengths, no lockstep, one trace per step kind.
+engine (paged KV cache + unified mixed prefill/decode step) on the same
+sharded mesh — mixed prompt lengths, no lockstep, one trace total.
 
     PYTHONPATH=src python examples/serve_batched.py
 """

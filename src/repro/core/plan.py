@@ -415,13 +415,25 @@ class ServePlan:
     # KV page dtype: "bf16" | "int8" | "fp32" (int8 reuses
     # train/compression.quantize on a per-token, per-head grid).
     kv_dtype: str
-    # Tokens per prefill chunk (prompts pad to a multiple of this; one trace).
+    # Tokens per prefill chunk (derivation target for the mixed-slab width).
     prefill_chunk: int
     # Serving context bound: block tables cover exactly this many positions.
     max_seq_len: int
+    # Width of the unified mixed prefill/decode slab: every slot owns this
+    # many query rows per step (decode uses 1, a prefill chunk up to all of
+    # them).  Wider slabs prefill faster but pay dead rows while decoding.
+    mixed_slab_width: int = 1
+    # KV pages streamed into one VMEM tile per kernel grid step (the fused
+    # paged-attention kernel's tile height), from the VMEM budget.
+    pages_per_tile: int = 1
+    # Attention engine of the unified step: the fused Pallas paged-attention
+    # kernel (True) vs the dense gather-then-attend fallback (False).  The
+    # roofline charges the fallback its gather bytes, so this knob feeds the
+    # decode-batch derivation too.
+    fused_attention: bool = True
     # Diagnostics (logged + dryrun records).
-    kv_bytes_per_token: int
-    hbm_kv_budget_bytes: int
+    kv_bytes_per_token: int = 0
+    hbm_kv_budget_bytes: int = 0
 
     @property
     def max_concurrency(self) -> int:
@@ -433,7 +445,8 @@ class ServePlan:
             f"serve plan for {self.arch}: decode_batch={self.decode_batch} "
             f"block_size={self.block_size} n_blocks={self.n_blocks} "
             f"kv_dtype={self.kv_dtype} prefill_chunk={self.prefill_chunk} "
-            f"max_seq={self.max_seq_len} "
+            f"slab={self.mixed_slab_width} pages/tile={self.pages_per_tile} "
+            f"fused={self.fused_attention} max_seq={self.max_seq_len} "
             f"kv_bytes/token={self.kv_bytes_per_token}"
         )
 
@@ -446,6 +459,9 @@ class ServePlan:
             "max_blocks_per_seq": self.max_blocks_per_seq,
             "kv_dtype": self.kv_dtype,
             "prefill_chunk": self.prefill_chunk,
+            "mixed_slab_width": self.mixed_slab_width,
+            "pages_per_tile": self.pages_per_tile,
+            "fused_attention": self.fused_attention,
             "max_seq_len": self.max_seq_len,
             "kv_bytes_per_token": self.kv_bytes_per_token,
         }
@@ -476,6 +492,15 @@ def _pow2_floor(n: int) -> int:
     return p
 
 
+def largest_divisor_of(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1).  Unlike
+    :func:`_largest_divisor_leq` it puts no divisibility demand on ``cap``."""
+    for d in range(min(n, max(cap, 1)), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 def derive_serve_plan(
     cfg,
     mesh_shape: Mapping[str, int],
@@ -486,6 +511,9 @@ def derive_serve_plan(
     block_size: Optional[int] = None,
     kv_dtype: Optional[str] = None,
     prefill_chunk: Optional[int] = None,
+    mixed_slab_width: Optional[int] = None,
+    pages_per_tile: Optional[int] = None,
+    fused_attention: bool = True,
     slack_blocks: int = 0,
     oversubscribe: float = 1.0,
 ) -> ServePlan:
@@ -494,13 +522,28 @@ def derive_serve_plan(
     * **decode batch** — decode is weight-streaming-bound; batching tokens
       amortizes the weight read until compute catches up at the machine
       balance point (Eq.4 analog): B* ~= machine_balance x bytes/param / 2.
-      Capped by the HBM KV budget at full context.
+      Capped by the HBM KV budget at full context.  With the fused
+      paged-attention kernel each slot's HBM traffic is just its own pages
+      read once; the gather fallback instead writes *and* re-reads a dense
+      ``max_seq_len``-long cache per slot per step, so its per-slot byte tax
+      (2 x ``max_seq_len`` x kv_bytes/token) stops the batch from amortizing
+      the weight stream long before the balance point — the fallback batch
+      is additionally capped at weight_bytes / gather_tax.  The fused
+      kernel's plan simply drops that term.
     * **KV dtype** — bf16 unless the bf16 pool cannot hold the
       roofline-preferred batch at ``max_seq_len``; then the paper's Int8
       deployment grid halves the page bytes (C2's precision knob applied to
       the cache instead of the weights).
-    * **block size** — one MXU sublane tile (``mxu_dim // 8``) so a gathered
-      page feeds the MM PU without re-tiling; never wider than the context.
+    * **block size** — one MXU sublane tile (``mxu_dim // 8``) so a page
+      feeds the MM PU without re-tiling; never wider than the context.
+    * **mixed-slab width** — query rows per slot in the unified step;
+      defaults to ``prefill_chunk`` (prefill keeps its compute-bound chunk,
+      decode slots carry the dead rows — the explicit latency/throughput
+      trade, overridable).
+    * **pages per VMEM tile** — the fused kernel double-buffers k+v page
+      tiles in VMEM; the tile height is the largest block-table divisor
+      whose tiles fit an eighth of the chip's VMEM (the rest holds q, the
+      accumulator and the output block).
 
     ``oversubscribe`` scales the block pool relative to the worst case
     (every slot at ``max_seq_len``).  At the default 1.0 the pool can host
@@ -534,6 +577,11 @@ def derive_serve_plan(
         kv_dtype = "bf16" if fits_bf16 else "int8"
     kv_tok = per_token(kv_dtype)
     cap = max(1, kv_budget // max(max_seq_len * kv_tok, 1))
+    if not fused_attention:
+        # Gather-bytes term (fallback only): every slot drags a dense
+        # write+read of its full-context cache through HBM each step.
+        gather_tax = 2.0 * max_seq_len * kv_tok
+        cap = max(1, min(cap, int(weight_bytes / max(gather_tax, 1.0))))
     if decode_batch is None:
         decode_batch = max(1, min(_pow2_floor(ridge), _pow2_floor(cap)))
     if block_size is None:
@@ -544,6 +592,18 @@ def derive_serve_plan(
     n_blocks = 1 + pool + slack_blocks  # +1: block 0 is trash
     if prefill_chunk is None:
         prefill_chunk = min(max_seq_len, max(block_size, 256))
+    if mixed_slab_width is None:
+        mixed_slab_width = prefill_chunk
+    mixed_slab_width = max(1, min(mixed_slab_width, max_seq_len))
+    if pages_per_tile is None:
+        # one pool page in VMEM: (block_size, n_kv_heads, d_head) values
+        # (+ a (block_size, n_kv_heads, 1) fp32 scale for int8 pages)
+        page_bytes = block_size * cfg.n_kv_heads * (
+            cfg.d_head * {"fp32": 4, "bf16": 2, "int8": 1}[kv_dtype]
+            + (4 if kv_dtype == "int8" else 0)
+        )
+        tile_cap = max(1, (hw.vmem_bytes // 8) // max(2 * page_bytes, 1))
+        pages_per_tile = largest_divisor_of(max_blocks_per_seq, tile_cap)
     return ServePlan(
         arch=cfg.name,
         decode_batch=int(decode_batch),
@@ -552,6 +612,9 @@ def derive_serve_plan(
         max_blocks_per_seq=int(max_blocks_per_seq),
         kv_dtype=kv_dtype,
         prefill_chunk=int(prefill_chunk),
+        mixed_slab_width=int(mixed_slab_width),
+        pages_per_tile=int(pages_per_tile),
+        fused_attention=bool(fused_attention),
         max_seq_len=int(max_seq_len),
         kv_bytes_per_token=int(kv_tok),
         hbm_kv_budget_bytes=kv_budget,

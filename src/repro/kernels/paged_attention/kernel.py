@@ -1,0 +1,242 @@
+"""Fused paged-attention Pallas kernel: decode/mixed-slab attention straight
+off the block table.
+
+The serving engine's old path gathered every slot's KV pages into a dense
+``(B, cache_len, KH, D)`` HBM buffer before attending — one full write + read
+of the whole cache per layer per step.  This kernel consumes the block-table
+row directly: for each slot it walks the table in tiles of
+``pages_per_tile`` pages, streams whole int8/bf16 pages (all KV heads at
+once — one contiguous DMA per pool per page) into a VMEM tile, dequantizes
+int8 pages in-kernel on ``train/compression.quantize``'s per-(token,
+kv-head) grid, and runs the online-softmax flash loop with per-slot length
+masking and sliding-window wraparound.  No dense gathered cache ever exists
+in HBM.
+
+Layouts (ops.py does the model-layout shuffle):
+  q       (B, KH, G*W, D)   row r of slot b = query i = r % W of group
+                            g = r // W, at absolute position lens[b] + i
+  pools   (N, bs, KH, D)    k/v pages (+ (N, bs, KH, 1) fp32 scales for
+                            int8); 16-bit float pools arrive bitcast to
+                            int16 (bits are bits for a DMA, and the
+                            interpreter's bf16 copy path is pathological)
+  table   (B, MB) int32     scalar-prefetched; block 0 is the trash block
+  lens    (B)    int32      positions already cached per slot
+  q_lens  (B)    int32      live query rows (0 idle / 1 decode / <=W prefill)
+
+Grid (B, NT), table tiles innermost; the (m, l, acc) scratch carries the
+online softmax across the tile sweep, all KV heads batched in one program.
+Tiles entirely past a slot's high-water mark (or entirely below its
+attention window) skip both the DMA and the compute — per-slot work is
+proportional to the slot's live context, not to ``cache_len``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar prefetch
+    tbl_ref, lens_ref, qlens_ref,
+    # inputs: q block in VMEM, pools pinned in HBM/ANY
+    q_ref, k_ref, v_ref, ks_ref, vs_ref,
+    # output
+    o_ref,
+    # scratch
+    kt, vt, kst, vst, m_ref, l_ref, acc_ref, sems,
+    *, W: int, bs: int, ppt: int, nt: int, window: int, scale: float,
+    quantized: bool,
+):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = lens_ref[b]  # first live query position of this slot
+    q_len = qlens_ref[b]
+    tile_lo = t * (ppt * bs)  # absolute position of the tile's first key
+    tile_hi = tile_lo + ppt * bs - 1
+    # Tile liveness: anything to attend here?  Keys above the slot's last
+    # query position are future/trash; with a sliding window, keys below
+    # base - (window - 1) are out of every row's window (SWA "wraparound":
+    # contexts longer than the window skip their own oldest tiles).
+    live = (q_len > 0) & (tile_lo <= base + q_len - 1)
+    if window > 0:
+        live &= tile_hi >= base - (window - 1)
+
+    @pl.when(live)
+    def _tile():
+        def copies(p):
+            blk = tbl_ref[b, t * ppt + p]
+            ops = [
+                pltpu.make_async_copy(k_ref.at[blk], kt.at[p], sems.at[0]),
+                pltpu.make_async_copy(v_ref.at[blk], vt.at[p], sems.at[1]),
+            ]
+            if quantized:
+                ops += [
+                    pltpu.make_async_copy(ks_ref.at[blk], kst.at[p], sems.at[2]),
+                    pltpu.make_async_copy(vs_ref.at[blk], vst.at[p], sems.at[3]),
+                ]
+            return ops
+
+        # Stream the tile's pages into VMEM, one page-fetch ahead of the
+        # wait (double-buffered pipeline; a fori_loop so the trace stays
+        # O(1) in pages_per_tile instead of unrolling every DMA).
+        for cp in copies(0):
+            cp.start()
+
+        def fetch(p, _):
+            @pl.when(p + 1 < ppt)
+            def _next():
+                for cp in copies(p + 1):
+                    cp.start()
+
+            for cp in copies(p):
+                cp.wait()
+            return 0
+
+        jax.lax.fori_loop(0, ppt, fetch, 0)
+
+        KH, GW, D = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+        T = ppt * bs
+
+        def pages(tile):  # (ppt, bs, KH, x) -> (T, KH, x), layout untouched
+            tile = tile.reshape(T, KH, tile.shape[-1])
+            if tile.dtype == jnp.int16:
+                # bf16 bits in an int16 carrier — re-tag and keep the MXU
+                # operand in bf16 (f32 accumulate): no widening pass over
+                # the tile, the matmul upconverts in-register.
+                return jax.lax.bitcast_convert_type(tile, jnp.bfloat16)
+            return tile.astype(jnp.float32)
+
+        k = pages(kt[...])
+        v = pages(vt[...])
+        if quantized:  # in-kernel dequant on the per-(token, head) grid
+            k = k * kst[...].reshape(T, KH, 1)
+            v = v * vst[...].reshape(T, KH, 1)
+
+        # Pages stay in their DMA'd (token, head, d) layout; the head dim
+        # rides as a dot_general batch dim so no in-VMEM transpose is paid.
+        q = q_ref[0].astype(k.dtype)  # (KH, GW, D)
+        s = (
+            jax.lax.dot_general(
+                q, k, (((2,), (2,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # (KH, GW, T)
+
+        qi = jax.lax.broadcasted_iota(jnp.int32, (GW, T), 0) % W
+        pos = base + qi  # per-row absolute position
+        j = tile_lo + jax.lax.broadcasted_iota(jnp.int32, (GW, T), 1)
+        valid = (j <= pos) & (qi < q_len)
+        if window > 0:
+            valid &= (pos - j) < window
+        valid = valid[None]  # broadcast over KH
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # `where` (not bare exp) so fully-masked rows contribute exactly 0
+        # while m is still NEG_INF — exp(NEG_INF - NEG_INF) would be 1.
+        p_ = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p_.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p_.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _done():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        ).astype(o_ref.dtype)
+
+
+def paged_attention_call(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_scale,
+    v_scale,
+    table: jax.Array,
+    lens: jax.Array,
+    q_lens: jax.Array,
+    *,
+    slab: int,
+    block_size: int,
+    pages_per_tile: int,
+    window: int = 0,
+    softmax_scale=None,
+    interpret: bool = True,
+):
+    """q: (B, KH, G*W, D) kernel layout; pools (N, bs, KH, D); returns the
+    same (B, KH, G*W, D).  ``pages_per_tile`` must divide the table width."""
+    B, KH, GW, D = q.shape
+    MB = table.shape[1]
+    bs = block_size
+    ppt = pages_per_tile
+    assert MB % ppt == 0, (MB, ppt)
+    nt = MB // ppt
+    quantized = k_scale is not None
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    if k_pages.dtype == jnp.bfloat16:
+        # DMA bits, not floats: the interpreter copies bf16 element-wise
+        # (~70x slower than int16); on hardware the bitcast is a no-op and
+        # the kernel re-widens with a 16-bit shift.
+        k_pages = jax.lax.bitcast_convert_type(k_pages, jnp.int16)
+        v_pages = jax.lax.bitcast_convert_type(v_pages, jnp.int16)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        W=slab, bs=bs, ppt=ppt, nt=nt, window=window, scale=scale,
+        quantized=quantized,
+    )
+    pool_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    scratch = [
+        _VMEM((ppt, bs, KH, D), k_pages.dtype),  # k tile
+        _VMEM((ppt, bs, KH, D), k_pages.dtype),  # v tile
+        _VMEM((ppt, bs, KH, 1), jnp.float32),  # k scales (int8 only)
+        _VMEM((ppt, bs, KH, 1), jnp.float32),  # v scales
+        _VMEM((KH, GW), jnp.float32),  # m
+        _VMEM((KH, GW), jnp.float32),  # l
+        _VMEM((KH, GW, D), jnp.float32),  # acc
+        pltpu.SemaphoreType.DMA((4,)),
+    ]
+    if not quantized:  # keep operand count static: pass the pools twice
+        k_scale, v_scale = k_pages, v_pages
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, nt),
+            in_specs=[
+                pl.BlockSpec((1, KH, GW, D), lambda b, t, *_: (b, 0, 0, 0)),
+                pool_spec, pool_spec, pool_spec, pool_spec,
+            ],
+            out_specs=pl.BlockSpec((1, KH, GW, D), lambda b, t, *_: (b, 0, 0, 0)),
+            scratch_shapes=scratch,
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KH, GW, D), q.dtype),
+        interpret=interpret,
+    )(table, lens, q_lens, q, k_pages, v_pages, k_scale, v_scale)

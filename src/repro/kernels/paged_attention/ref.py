@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the fused paged-attention kernel.
+
+Same call contract as the kernel (pool entry + block table + per-slot
+lens/q_lens), but it is allowed to do the thing the kernel exists to avoid:
+materialize the dense gather in HBM and run an exact masked softmax over it.
+The kernel's parity sweep (tests/test_kernels_paged_attention.py) pins the
+fused path to this oracle across bf16/int8 pages, SWA, ragged lengths and
+empty slots.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    entry: dict,
+    table: jax.Array,
+    lens: jax.Array,
+    q_lens: jax.Array,
+    *,
+    block_size: int,
+    window: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """q: (B, W, H, D); entry: paged pool entry (models/cache layout);
+    table: (B, MB) int32; lens: (B,) positions already cached per slot;
+    q_lens: (B,) live query rows per slot (0 idle / 1 decode / <=W prefill).
+
+    Query row i of slot b sits at absolute position ``lens[b] + i`` and is
+    live iff ``i < q_lens[b]``; dead rows return zeros.  Assumes this step's
+    KV was already written into the pool (``models/cache.paged_update``).
+    """
+    from repro.models.cache import paged_gather
+
+    B, W, H, D = q.shape
+    k, v = paged_gather(entry, table, block_size)  # (B, Skv, KH, D), the
+    KH = k.shape[2]  # dense materialization the kernel never does
+    G = H // KH
+    Skv = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    qr = q.reshape(B, W, KH, G, D)
+    s = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )  # (B, KH, G, W, Skv)
+    pos = lens[:, None] + jnp.arange(W)[None, :]  # (B, W)
+    j = jnp.arange(Skv)
+    valid = j[None, None, :] <= pos[:, :, None]  # (B, W, Skv)
+    valid &= (jnp.arange(W)[None, :] < q_lens[:, None])[..., None]
+    if window > 0:
+        valid &= (pos[:, :, None] - j[None, None, :]) < window
+    vm = valid[:, None, None]  # (B, 1, 1, W, Skv)
+    s = jnp.where(vm, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(vm, jnp.exp(s - m), 0.0)  # dead rows stay exactly zero
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p / l, v.astype(jnp.float32))
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, W, H, D).astype(q.dtype)

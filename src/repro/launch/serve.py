@@ -44,6 +44,9 @@ def run_batched(a, cfg, mesh) -> dict:
         max_seq_len=a.max_seq,
         decode_batch=a.batch if a.fix_batch else None,
         prefill_chunk=a.prefill_chunk,
+        mixed_slab_width=a.slab_width,
+        pages_per_tile=a.pages_per_tile,
+        fused_attention=not a.no_fused,
         kv_dtype=a.kv_dtype,
     )
     print(plan.describe())
@@ -52,6 +55,9 @@ def run_batched(a, cfg, mesh) -> dict:
     params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
     params = jax.device_put(params, sh.param_shardings(params))
     engine = ServingEngine(params, cfg, plan, serve, shardings=sh)
+    if engine.fused != serve.fused_attention:
+        print("multi-device mesh: unified step falls back to the gather path "
+              "(Pallas kernel is single-device for now)")
     reqs = random_stream(cfg, a.requests, a.prompt_len, a.gen, a.stagger, seed=1)
     out = engine.run(reqs)
     summary = engine.summary()
@@ -106,6 +112,14 @@ def main():
                     help="engine iterations between request arrivals")
     ap.add_argument("--max-seq", type=int, default=2048)
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--slab-width", type=int, default=None,
+                    help="mixed-slab query rows per slot (default: prefill chunk)")
+    ap.add_argument("--pages-per-tile", type=int, default=None,
+                    help="KV pages per VMEM tile of the fused kernel "
+                         "(default: derived from the VMEM budget)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="use the dense gather path instead of the fused "
+                         "Pallas paged-attention kernel")
     ap.add_argument("--kv-dtype", default=None,
                     choices=[None, "bf16", "int8", "fp32"])
     a = ap.parse_args()

@@ -15,10 +15,11 @@ collect_cache=True forward pass into a decode-ready cache.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan
@@ -145,25 +146,40 @@ def init_paged_cache(cfg: ArchConfig, plan: ExecutionPlan, serve) -> PyTree:
     return {"layers": {"stack": stack, "tail": tail}}
 
 
-def paged_flat_slots(table: jax.Array, positions: jax.Array, block_size: int):
-    """Flat pool slots for ``positions`` (B, S) under block table (B, MB)."""
-    B = table.shape[0]
-    blk = table[jnp.arange(B)[:, None], positions // block_size]
-    return blk * block_size + positions % block_size
+def paged_flat_slots(
+    table: jax.Array,
+    positions: jax.Array,
+    block_size: int,
+    valid: Optional[jax.Array] = None,
+):
+    """Flat pool slots for ``positions`` (B, S) under block table (B, MB).
+
+    ``valid`` (B, S) bool routes masked positions to the trash block (block
+    0), which is how the unified mixed step keeps static shapes: a decode
+    slot's unused slab rows and an idle slot's whole row write there.
+    Positions are clamped into the table extent first (a dead row's
+    position may run past ``max_seq_len``)."""
+    B, MB = table.shape
+    pos = jnp.clip(positions, 0, MB * block_size - 1)
+    blk = table[jnp.arange(B)[:, None], pos // block_size]
+    if valid is not None:
+        blk = jnp.where(valid, blk, 0)
+    return blk * block_size + pos % block_size
 
 
 def paged_update(
     entry: dict, k: jax.Array, v: jax.Array, positions: jax.Array,
-    table: jax.Array, block_size: int,
+    table: jax.Array, block_size: int, valid: Optional[jax.Array] = None,
 ) -> dict:
     """Write new (B, S, KV, Dh) keys/values at their slots; returns the entry.
 
-    Slot collisions only happen on the trash block (idle slots), where any
-    winner is fine — live requests own disjoint blocks by construction."""
+    Slot collisions only happen on the trash block (idle slots and, with
+    ``valid`` given, the dead rows of a mixed slab), where any winner is
+    fine — live requests own disjoint blocks by construction."""
     from repro.train.compression import quantize
 
     B, S = k.shape[:2]
-    flat = paged_flat_slots(table, positions, block_size).reshape(-1)
+    flat = paged_flat_slots(table, positions, block_size, valid).reshape(-1)
 
     def put(pool, val):
         fp = pool.reshape((-1,) + pool.shape[2:])
@@ -184,17 +200,35 @@ def paged_update(
     return out
 
 
-def paged_gather(entry: dict, table: jax.Array, block_size: int):
-    """Materialize each slot's pages in position order: (B, MB*bs, KV, Dh).
+def paged_gather(
+    entry: dict,
+    table: jax.Array,
+    block_size: int,
+    max_blocks: Optional[int] = None,
+):
+    """Materialize each slot's pages in position order: (B, L*bs, KV, Dh).
 
     Key j of the gathered view sits at sequence position j, so the attention
     mask is just ``j <= q_position`` — the block indirection vanishes here.
-    (Reference path; a fused Pallas paged-attention kernel would consume the
-    block table directly instead of gathering.)"""
+    This is the fallback/oracle path; the production serve step runs
+    ``kernels/paged_attention`` which consumes the table directly and never
+    materializes this buffer.
+
+    ``L`` is clamped to the live blocks' high-water mark instead of always
+    the full table width: block tables are prefix-dense (a slot's blocks
+    occupy its leading columns), so every live position sits below the last
+    non-trash column and the tail of the table gathers nothing but trash.
+    The clamp is automatic when ``table`` is concrete (eager tests, the
+    interpreter path); under a jit trace the width is static, so callers
+    pass ``max_blocks`` themselves or get the full extent."""
     from repro.train.compression import dequantize
 
     MB = table.shape[1]
-    pos = jnp.arange(MB * block_size)
+    if max_blocks is None and not isinstance(table, jax.core.Tracer):
+        live = np.nonzero(np.asarray(table).any(axis=0))[0]
+        max_blocks = int(live[-1]) + 1 if live.size else 1
+    L = min(MB, max_blocks) if max_blocks else MB
+    pos = jnp.arange(L * block_size)
     blk = table[:, pos // block_size]
     flat = blk * block_size + pos % block_size  # (B, MB*bs)
 

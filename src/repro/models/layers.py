@@ -209,13 +209,18 @@ def paged_attention(
 ) -> jax.Array:
     """Attention against gathered KV pages with per-slot positions.
 
-    q: (B, S, H, D) — S is 1 for decode, the chunk width for chunked prefill.
-    k/v: (B, Skv, KH, D) page gather where key j sits at sequence position j
-    (``models/cache.paged_gather`` guarantees this).  q_positions: (B, S)
-    absolute positions, so every slot in a continuous batch masks by its own
-    length — the mask is ``j <= pos`` (+ window), never a shared scalar.
-    Serving oracle of the ATB; the batched-decode analogue of
-    ``decode_attention`` with the block indirection already resolved.
+    q: (B, S, H, D) — S is 1 for a decode row, up to the mixed-slab width
+    for a prefill chunk.  k/v: (B, Skv, KH, D) page gather where key j sits
+    at sequence position j (``models/cache.paged_gather`` guarantees this).
+    q_positions: (B, S) absolute positions, so every slot in a continuous
+    batch masks by its own length — the mask is ``j <= pos`` (+ window),
+    never a shared scalar.
+
+    This is the gather *fallback* of the unified serve step (model-sharded
+    meshes, where GSPMD cannot partition the Pallas call) and, composed
+    with ``paged_gather``, the oracle the fused block-table kernel
+    (``repro.kernels.paged_attention``) is tested against — the production
+    path never materializes the (B, Skv, ...) gather this function reads.
     """
     B, S, H, D = q.shape
     KH = k.shape[2]

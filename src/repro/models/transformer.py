@@ -81,15 +81,34 @@ def attention_stage(
     new_cache = None
     if cache is not None and "paged" in cache:
         # Continuous-batching serve path: write this step's KV into the
-        # block pool at each slot's own positions, then attend against the
-        # gathered pages with per-slot masks (prefill chunks and batched
-        # decode are the same code — only S differs).
+        # block pool at each slot's own positions, then attend straight off
+        # the block table (prefill-chunk rows and decode rows are the same
+        # code — ``q_lens`` says how many slab rows are live per slot).
         bs = page_state["block_size"]
         table = page_state["table"]
+        q_lens = page_state.get("q_lens")
         pos2d = jnp.broadcast_to(positions, (B, S)).astype(jnp.int32)
-        entry = C.paged_update(cache["paged"], k, v, pos2d, table, bs)
-        kf, vf = C.paged_gather(entry, table, bs)
-        o = L.paged_attention(q, kf, vf, pos2d, window=window)
+        valid = None
+        if q_lens is not None:  # dead slab rows write to the trash block
+            valid = jnp.arange(S)[None, :] < q_lens[:, None]
+        entry = C.paged_update(cache["paged"], k, v, pos2d, table, bs, valid)
+        if page_state.get("fused"):
+            # Fused Pallas kernel: walks the table, streams pages into VMEM
+            # tiles, dequantizes int8 in-kernel — no dense gather in HBM.
+            from repro.kernels.paged_attention.ops import paged_attention
+
+            ql = q_lens if q_lens is not None else jnp.full((B,), S, jnp.int32)
+            o = paged_attention(
+                q, entry, table, pos2d[:, 0], ql,
+                block_size=bs, window=window,
+                pages_per_tile=page_state.get("pages_per_tile", 0),
+            )
+        else:
+            # jnp fallback (model-sharded meshes, oracle tests): gather the
+            # pages — clamped to the live high-water mark when concrete —
+            # then attend with per-slot masks.
+            kf, vf = C.paged_gather(entry, table, bs)
+            o = L.paged_attention(q, kf, vf, pos2d, window=window)
         out = shard(o.reshape(B, S, H * Dh), "act_heads_flat") @ ap["wo"]
         return out, {"paged": entry}, None
     if cache is None:

@@ -7,21 +7,28 @@ Two layers:
   dry-run lowers these for the decode_32k / long_500k / prefill_32k cells
   and non-attention archs (RWKV/RG-LRU/enc-dec) serve through it.
 * ``ServingEngine`` — continuous batching over the paged KV cache
-  (``models/cache.init_paged_cache``): a fixed grid of decode slots, chunked
-  prefill interleaved with batched decode, both as static-shape jitted steps
-  so request churn never retraces.  Scheduling policy lives host-side in
-  ``serve/scheduler.py``; the knobs (decode batch, block size, KV dtype,
-  prefill chunk) come from ``core/plan.derive_serve_plan``.
+  (``models/cache.init_paged_cache``) with exactly ONE static-shape jitted
+  device program: the unified mixed prefill/decode step.  Every slot owns
+  ``mixed_slab_width`` query rows of a shared (B, W) token slab — a decode
+  slot uses 1, a prefill slot up to W (its next prompt chunk), idle rows
+  are dead and write to the trash block — so prefilling new requests rides
+  in whatever rows the decode batch isn't using instead of stalling it for
+  an iteration.  Attention runs through the fused Pallas paged-attention
+  kernel (``kernels/paged_attention``), which consumes the block table
+  directly; the dense gather fallback only remains for model-sharded
+  meshes (GSPMD cannot partition the kernel yet) and as the oracle.
+  Scheduling policy lives host-side in ``serve/scheduler.py``; the knobs
+  (decode batch, block size, KV dtype, slab width, pages per VMEM tile)
+  come from ``core/plan.derive_serve_plan``.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan, ServePlan, serve_feasible
@@ -88,19 +95,19 @@ def greedy_generate(
 class ServingEngine:
     """Continuous-batching serving over the paged KV cache.
 
-    Exactly two jitted device programs, both with static shapes:
+    Exactly ONE jitted device program with static shapes:
 
-    * ``prefill_step(params, pools, tokens (1,C), table_row, start, last_idx)``
-      — one prompt chunk for one slot, writing its pages into the shared
-      pool; on the final chunk ``last_idx`` points at the true last prompt
-      token and the returned greedy token is the request's first output.
-    * ``decode_step(params, pools, tokens (B,1), tables, lens)`` — one token
-      for every slot at once; idle slots point at the trash block and cost
-      one lane of the batch (their output is discarded).
+    * ``step(params, pools, token_slab (B, W), tables (B, MB), lens (B,),
+      kinds (B,))`` — ``kinds[b]`` is slot b's live query-row count (0 idle,
+      1 decode, n <= W prefill chunk); ``lens[b]`` the absolute position of
+      its first row.  Each slot's KV rides its own block-table row, the
+      fused paged-attention kernel masks per slot, and the returned greedy
+      token is taken at the slot's last live row — a runner's next token,
+      or the first output of a request whose final prompt chunk this was.
 
-    The scheduler interleaves them per iteration: admit, (maybe) one prefill
-    chunk, one batched decode.  ``trace_counts`` proves there is no
-    per-request retracing — it stays at 1/1 however the stream churns.
+    The scheduler packs the slab per iteration: admit, grow, one mixed
+    step.  ``trace_counts`` proves there is no per-request retracing — it
+    stays at {"step": 1} however the stream churns.
     """
 
     def __init__(
@@ -111,6 +118,7 @@ class ServingEngine:
         serve: ServePlan,
         *,
         shardings=None,
+        fused: Optional[bool] = None,
     ):
         ok, reason = serve_feasible(cfg)
         if not ok:
@@ -124,37 +132,43 @@ class ServingEngine:
                 self.pools, shardings.cache_shardings(self.pools)
             )
         shard = shardings.constrain if shardings is not None else Identity
-        self.trace_counts = {"prefill": 0, "decode": 0}
+        if fused is None:
+            # GSPMD cannot partition the Pallas call over a multi-device
+            # mesh yet (ROADMAP: shard_map decode); those engines fall
+            # back to the gather path, everything else runs the kernel
+            # (a single-device Shardings is just an identity placement).
+            fused = serve.fused_attention and (
+                shardings is None or shardings.mesh.size == 1
+            )
+        self.fused = bool(fused)
+        self.trace_counts = {"step": 0}
         self.iteration = 0
         self.stats = {
-            "prefill_steps": 0, "decode_steps": 0, "prefill_tokens": 0,
-            "decode_tokens": 0, "occupancy_sum": 0.0,
+            "steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+            "occupancy_sum": 0.0,
         }
-        bs = serve.block_size
+        page_state = {
+            "block_size": serve.block_size,
+            "fused": self.fused,
+            "pages_per_tile": serve.pages_per_tile,
+        }
 
-        def prefill_fn(params, pools, tokens, table_row, start, last_idx):
-            self.trace_counts["prefill"] += 1
-            cache = {"layers": pools["layers"], "t": start}
-            x, nc, _ = forward(
-                params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
-                shard=shard, page_state={"table": table_row, "block_size": bs},
-            )
-            xl = lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
-            tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
-            return tok, {"layers": nc["layers"]}
-
-        def decode_fn(params, pools, tokens, tables, lens):
-            self.trace_counts["decode"] += 1
+        def step_fn(params, pools, tokens, tables, lens, kinds):
+            self.trace_counts["step"] += 1
             cache = {"layers": pools["layers"], "t": lens}
             x, nc, _ = forward(
                 params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
-                shard=shard, page_state={"table": tables, "block_size": bs},
+                shard=shard,
+                page_state={**page_state, "table": tables, "q_lens": kinds},
             )
-            tok = jnp.argmax(logits_fn(params, x, cfg)[:, -1], axis=-1)
+            # per-slot greedy token at the last live row (kinds-1; row 0 for
+            # decode slots, the final prompt token on a last prefill chunk)
+            idx = jnp.maximum(kinds - 1, 0)
+            xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
             return tok, {"layers": nc["layers"]}
 
-        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -171,36 +185,24 @@ class ServingEngine:
         self.iteration = 0
 
     def step(self) -> None:
-        """One engine iteration: admit -> one prefill chunk -> batched decode."""
+        """One engine iteration: admit -> grow -> one unified mixed step."""
         s = self.sched
         s.admit(self.iteration)
-        req = s.next_prefill()
-        if req is not None:
-            c = self.serve.prefill_chunk
-            chunk = req.prompt[req.pos : req.pos + c]
-            tokens = np.zeros((1, c), np.int32)
-            tokens[0, : len(chunk)] = chunk
-            is_last = req.pos + c >= len(req.prompt)
-            last_idx = np.int32(len(req.prompt) - 1 - req.pos if is_last else 0)
-            tok, self.pools = self._prefill(
-                self.params, self.pools, tokens,
-                s.table[req.slot : req.slot + 1],
-                np.asarray([req.pos], np.int32), last_idx,
+        s.grow_for_decode()
+        if s.busy():
+            tokens, tables, lens, kinds = s.slab_view(self.serve.mixed_slab_width)
+            n_decode = len(s.running())
+            n_prefill = int(kinds.sum()) - n_decode
+            sampled, self.pools = self._step(
+                self.params, self.pools, tokens, tables, lens, kinds
             )
-            s.prefill_chunk_done(req, int(tok[0]) if is_last else None)
-            self.stats["prefill_steps"] += 1
-            self.stats["prefill_tokens"] += len(chunk)
-        if s.running():
-            s.grow_for_decode()
-            n_active = len(s.running())
-            tables, lens = s.decode_view()
-            sampled, self.pools = self._decode(
-                self.params, self.pools, s.last_tokens()[:, None], tables, lens,
+            s.slab_done(np.asarray(sampled), kinds)
+            self.stats["steps"] += 1
+            self.stats["decode_tokens"] += n_decode
+            self.stats["prefill_tokens"] += n_prefill
+            self.stats["occupancy_sum"] += (
+                int((kinds > 0).sum()) / self.serve.decode_batch
             )
-            s.decode_done(np.asarray(sampled))
-            self.stats["decode_steps"] += 1
-            self.stats["decode_tokens"] += n_active
-            self.stats["occupancy_sum"] += n_active / self.serve.decode_batch
         self.iteration += 1
 
     def run(self, requests=(), max_iterations: int = 100_000) -> dict:
@@ -216,16 +218,16 @@ class ServingEngine:
         return {r.rid: list(r.out) for r in self.sched.finished}
 
     def summary(self) -> dict:
-        d = max(self.stats["decode_steps"], 1)
+        d = max(self.stats["steps"], 1)
         return {
             "iterations": self.iteration,
-            "prefill_steps": self.stats["prefill_steps"],
-            "decode_steps": self.stats["decode_steps"],
+            "steps": self.stats["steps"],
             "prefill_tokens": self.stats["prefill_tokens"],
             "decode_tokens": self.stats["decode_tokens"],
             "mean_occupancy": self.stats["occupancy_sum"] / d,
             "evictions": self.sched.n_evictions,
             "traces": dict(self.trace_counts),
+            "fused_attention": self.fused,
             "wall_s": self.stats.get("wall_s"),
             "tok_per_s": (
                 (self.stats["prefill_tokens"] + self.stats["decode_tokens"])

@@ -1,19 +1,22 @@
 """Continuous-batching scheduler (host side).
 
-The device side of serving is two static-shape jitted steps (one prefill
-chunk, one batched decode — ``serve/engine.py``); everything dynamic lives
-here as plain Python: request admission, block accounting, chunked-prefill
-interleaving, completion and eviction.  The scheduler owns the block tables
-and per-slot lengths as numpy arrays and hands device copies to each step,
-so no step ever retraces on request churn.
+The device side of serving is ONE static-shape jitted step (the unified
+mixed prefill/decode slab — ``serve/engine.py``); everything dynamic lives
+here as plain Python: request admission, block accounting, slab packing,
+completion and eviction.  The scheduler owns the block tables and per-slot
+lengths as numpy arrays and hands device copies to each step, so the step
+never retraces on request churn.
 
-Policy (Orca-style iteration-level scheduling):
+Policy (Orca-style iteration-level scheduling, token-level batching):
 
 * **admission** — FCFS by arrival; a waiting request is admitted when a
-  decode slot is free and the pool can cover its padded prompt.
-* **prefill** — one ``serve_plan.prefill_chunk``-wide chunk per engine
-  iteration for the oldest admitted-but-unfinished request, interleaved
-  with the batched decode so decode latency stays bounded.
+  decode slot is free and the pool can cover its prompt.
+* **slab packing** — every slot contributes rows to one (B, W) token slab
+  per iteration: a mid-prefill slot fills its row with the next <= W prompt
+  tokens, a running slot carries its last sampled token in row 0, and idle
+  rows are dead (``kinds`` = live rows per slot; dead rows write to the
+  trash block).  Prefill chunks therefore ride in whatever slots the decode
+  batch isn't using — prefilling a new request never stalls the runners.
 * **growth/eviction** — decode slots grow their block list lazily, one
   block at a time; when the pool is exhausted the *youngest* running
   request is evicted back to the waiting queue (recompute-style preemption,
@@ -137,25 +140,24 @@ class Scheduler:
         self.n_evictions = 0
 
     # ------------------------------------------------------------- helpers
-    def padded_prompt_len(self, req: Request) -> int:
-        c = self.serve.prefill_chunk
-        return -(-len(req.prompt) // c) * c
-
     def _blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.serve.block_size)
 
     def submit(self, req: Request) -> None:
         limit = self.serve.max_blocks_per_seq * self.serve.block_size
-        if self.padded_prompt_len(req) + req.max_new_tokens > limit:
+        if len(req.prompt) + req.max_new_tokens > limit:
             raise ValueError(
-                f"request {req.rid}: padded prompt {self.padded_prompt_len(req)}"
+                f"request {req.rid}: prompt {len(req.prompt)}"
                 f" + {req.max_new_tokens} new tokens exceeds max_seq {limit}"
             )
         self.waiting.append(req)
 
     # ----------------------------------------------------------- admission
     def admit(self, iteration: int) -> None:
-        """FCFS: move waiting requests into free slots while blocks last."""
+        """FCFS: move waiting requests into free slots while blocks last.
+
+        Dead slab rows write to the trash block, so a prompt needs exactly
+        ``ceil(len / block_size)`` blocks — no chunk-padding waste."""
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
         for req in list(self.waiting):
             if req.arrival > iteration:
@@ -163,7 +165,7 @@ class Scheduler:
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
                 return
-            blocks = self.alloc.alloc(self._blocks_for(self.padded_prompt_len(req)))
+            blocks = self.alloc.alloc(self._blocks_for(len(req.prompt)))
             if blocks is None:
                 return  # pool full: keep FCFS order, try next iteration
             self.waiting.remove(req)
@@ -175,26 +177,68 @@ class Scheduler:
             self.table[slot, : len(blocks)] = blocks
             self.lens[slot] = 0
 
-    # ------------------------------------------------------------- prefill
-    def next_prefill(self) -> Optional[Request]:
-        """Oldest admitted request that still has prompt tokens to prefill."""
-        cands = [s for s in self.slots if s is not None and s.state == PREFILL]
-        cands.sort(key=lambda r: (r.arrival, r.rid))
-        return cands[0] if cands else None
+    # ------------------------------------------------------------ the slab
+    def busy(self) -> bool:
+        return any(s is not None for s in self.slots)
 
-    def prefill_chunk_done(self, req: Request, first_token: Optional[int]) -> None:
-        """Advance ``req.pos`` one chunk; on the final chunk record the first
-        sampled token and flip the slot to RUNNING (visible to decode)."""
-        req.pos = min(req.pos + self.serve.prefill_chunk, len(req.prompt))
-        if req.pos >= len(req.prompt):
-            assert first_token is not None
-            req.out.append(int(first_token))
-            req.state = RUNNING
-            self.lens[req.slot] = len(req.prompt)
+    def slab_view(self, width: int):
+        """Pack one engine iteration's (B, W) token slab.
+
+        Returns (tokens, tables, lens, kinds) as numpy arrays:
+        ``kinds[b]`` is the number of live query rows of slot b — 0 for an
+        idle slot (whole row dead, table zeroed to the trash block), 1 for
+        a decode slot (its last sampled token), up to W for a prefill slot
+        (its next prompt chunk).  ``lens[b]`` is the absolute position of
+        the row's first token."""
+        B = self.serve.decode_batch
+        tokens = np.zeros((B, width), np.int32)
+        tables = np.zeros_like(self.table)
+        lens = np.zeros((B,), np.int32)
+        kinds = np.zeros((B,), np.int32)
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tables[b] = self.table[b]
+            if req.state == RUNNING:
+                tokens[b, 0] = req.out[-1]
+                lens[b] = self.lens[b]
+                kinds[b] = 1
+            elif req.state == PREFILL:
+                chunk = req.prompt[req.pos : req.pos + width]
+                tokens[b, : len(chunk)] = chunk
+                lens[b] = req.pos
+                kinds[b] = len(chunk)
+        return tokens, tables, lens, kinds
+
+    def slab_done(self, sampled: np.ndarray, kinds: np.ndarray) -> None:
+        """Consume one unified step's per-slot sampled tokens ((B,) int).
+
+        ``sampled[b]`` is the greedy token at the slot's last live row — a
+        running slot's next token, or (on the final prompt chunk) the
+        request's first output token; mid-chunk samples are discarded."""
+        for b, req in enumerate(self.slots):
+            if req is None or kinds[b] == 0:
+                continue
+            if req.state == RUNNING:
+                self.lens[b] += 1
+                req.out.append(int(sampled[b]))
+                if req.done:
+                    req.state = DONE
+                    self._release(req)
+                    self.finished.append(req)
+            elif req.state == PREFILL:
+                req.pos += int(kinds[b])
+                if req.pos >= len(req.prompt):
+                    req.out.append(int(sampled[b]))
+                    req.state = RUNNING
+                    self.lens[b] = len(req.prompt)
 
     # -------------------------------------------------------------- decode
     def running(self) -> list[Request]:
         return [s for s in self.slots if s is not None and s.state == RUNNING]
+
+    def prefilling(self) -> list[Request]:
+        return [s for s in self.slots if s is not None and s.state == PREFILL]
 
     def _active(self) -> list[Request]:
         """Slot holders that own blocks (running *or* mid-prefill) — the
@@ -248,16 +292,6 @@ class Scheduler:
         self.waiting.append(req)
         self.n_evictions += 1
 
-    def decode_done(self, sampled: np.ndarray) -> None:
-        """Consume one decode step's sampled tokens ((decode_batch,) int)."""
-        for req in self.running():
-            self.lens[req.slot] += 1
-            req.out.append(int(sampled[req.slot]))
-            if req.done:
-                req.state = DONE
-                self._release(req)
-                self.finished.append(req)
-
     def _release(self, req: Request) -> None:
         self.alloc.free(req.blocks)
         req.blocks = []
@@ -268,26 +302,9 @@ class Scheduler:
             req.slot = -1
 
     # ------------------------------------------------------------- queries
-    def last_tokens(self) -> np.ndarray:
-        """Per-slot token to feed the next decode step (0 for idle slots)."""
-        toks = np.zeros((self.serve.decode_batch,), np.int32)
-        for req in self.running():
-            toks[req.slot] = req.out[-1]
-        return toks
-
-    def decode_view(self) -> tuple[np.ndarray, np.ndarray]:
-        """(table, lens) as the decode step must see them: rows of slots that
-        are idle *or still prefilling* point at the trash block, so the
-        batched write of their dummy token can never land in pages a
-        mid-prefill request already owns."""
-        mask = np.zeros((self.serve.decode_batch,), bool)
-        for req in self.running():
-            mask[req.slot] = True
-        return np.where(mask[:, None], self.table, 0), np.where(mask, self.lens, 0)
-
     @property
     def occupancy(self) -> float:
-        return len(self.running()) / self.serve.decode_batch
+        return len(self._active()) / self.serve.decode_batch
 
     @property
     def idle(self) -> bool:

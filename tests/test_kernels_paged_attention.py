@@ -1,0 +1,142 @@
+"""Fused paged-attention kernel vs the jnp oracle: bf16/int8 pages, SWA
+wraparound, ragged per-slot lengths, empty slots on trash block 0, mixed
+prefill/decode slabs, GQA, and tile-sweep invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quantize(x):
+    """train/compression.quantize's per-(token, kv-head) int8 grid."""
+    s = jnp.maximum(jnp.abs(x).max(-1, keepdims=True), 1e-12) / 127.0
+    return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s
+
+
+def _mk_case(B, W, H, KH, D, bs, MB, kv_dtype, seed=0):
+    """Random pools + prefix-dense tables with ragged lens/q_lens; slot 0 is
+    empty (kinds 0, whole table on trash block 0)."""
+    key = jax.random.fold_in(KEY, seed)
+    N = 1 + B * MB
+    q = jax.random.normal(key, (B, W, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (N, bs, KH, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (N, bs, KH, D), jnp.float32)
+    if kv_dtype == "int8":
+        qk, sk = _quantize(k)
+        qv, sv = _quantize(v)
+        entry = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    else:
+        entry = {"k": k.astype(kv_dtype), "v": v.astype(kv_dtype)}
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, MB * bs - W, B).astype(np.int32)
+    q_lens = rng.integers(1, W + 1, B).astype(np.int32)
+    table = np.zeros((B, MB), np.int32)
+    for b in range(B):
+        nb = -(-(int(lens[b]) + W) // bs)
+        table[b, :nb] = 1 + b * MB + np.arange(nb)
+    table[0], lens[0], q_lens[0] = 0, 0, 0  # empty slot on trash block 0
+    return q, entry, jnp.asarray(table), jnp.asarray(lens), jnp.asarray(q_lens)
+
+
+CASES = [
+    # (B, W, H, KH, D, bs, MB, kv_dtype, window, pages_per_tile)
+    (3, 1, 4, 2, 32, 4, 8, "float32", 0, 2),  # pure decode, GQA
+    (3, 4, 4, 2, 32, 4, 8, "float32", 0, 8),  # mixed slab, one-tile sweep
+    (2, 8, 2, 1, 64, 8, 16, "bfloat16", 0, 4),  # bf16 pages, prefill rows
+    (2, 4, 4, 2, 32, 4, 16, "int8", 0, 16),  # int8 in-kernel dequant
+    (3, 4, 2, 2, 32, 4, 16, "float32", 12, 1),  # SWA, page-at-a-time
+    (2, 1, 4, 1, 64, 8, 8, "int8", 20, 2),  # SWA decode past the window
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_kernel_matches_ref(case):
+    B, W, H, KH, D, bs, MB, kv_dtype, window, ppt = case
+    q, entry, table, lens, q_lens = _mk_case(B, W, H, KH, D, bs, MB, kv_dtype)
+    got = np.asarray(
+        paged_attention(
+            q, entry, table, lens, q_lens,
+            block_size=bs, window=window, pages_per_tile=ppt,
+        ),
+        np.float32,
+    )
+    want = np.asarray(
+        paged_attention_ref(
+            q, entry, table, lens, q_lens, block_size=bs, window=window
+        ),
+        np.float32,
+    )
+    tol = 3e-2 if kv_dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    # the empty slot (trash table, q_lens 0) must come back exactly zero
+    np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+
+
+def test_tile_sweep_invariance():
+    """Plan knob contract (paper C2 analog): pages_per_tile changes the VMEM
+    schedule, never the numbers."""
+    q, entry, table, lens, q_lens = _mk_case(2, 4, 4, 2, 32, 4, 16, "float32")
+    outs = [
+        np.asarray(
+            paged_attention(
+                q, entry, table, lens, q_lens,
+                block_size=4, pages_per_tile=ppt,
+            )
+        )
+        for ppt in (1, 2, 4, 16)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+def test_swa_wraparound_ignores_pages_below_window():
+    """With a sliding window, pages wholly below every row's window must not
+    influence the output: corrupting them changes nothing (the kernel skips
+    those tiles outright)."""
+    B, W, H, KH, D, bs, MB, window = 1, 1, 2, 1, 32, 4, 8, 8
+    q, entry, table, lens, q_lens = _mk_case(B, W, H, KH, D, bs, MB, "float32")
+    lens = jnp.array([28], jnp.int32)  # deep context, window covers 21..28
+    q_lens = jnp.array([1], jnp.int32)
+    table = jnp.arange(MB, dtype=jnp.int32)[None] + 1
+    base = np.asarray(
+        paged_attention(
+            q, entry, table, lens, q_lens,
+            block_size=bs, window=window, pages_per_tile=2,
+        )
+    )
+    smashed = dict(entry)
+    smashed["k"] = entry["k"].at[1:4].set(1e3)  # positions 0..11, all dead
+    smashed["v"] = entry["v"].at[1:4].set(-1e3)
+    got = np.asarray(
+        paged_attention(
+            q, smashed, table, lens, q_lens,
+            block_size=bs, window=window, pages_per_tile=2,
+        )
+    )
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+def test_matches_model_fallback_path():
+    """The kernel and the model's gather fallback
+    (models/layers.paged_attention over models/cache.paged_gather) are the
+    same op on live rows."""
+    from repro.models.cache import paged_gather
+    from repro.models.layers import paged_attention as gather_attn
+
+    B, W, H, KH, D, bs, MB = 2, 4, 4, 2, 32, 4, 8
+    q, entry, table, lens, q_lens = _mk_case(B, W, H, KH, D, bs, MB, "float32", seed=3)
+    got = np.asarray(
+        paged_attention(q, entry, table, lens, q_lens, block_size=bs)
+    )
+    kf, vf = paged_gather(entry, table, bs, max_blocks=MB)
+    pos = np.asarray(lens)[:, None] + np.arange(W)[None]
+    want = np.asarray(gather_attn(q, kf, vf, jnp.asarray(pos)))
+    live = np.arange(W)[None] < np.asarray(q_lens)[:, None]  # (B, W)
+    np.testing.assert_allclose(
+        got[live], want[live], rtol=2e-5, atol=2e-5
+    )

@@ -114,7 +114,68 @@ def test_int8_kv_round_trip_tolerance(key):
         assert err.max() < 1.0 / 127.0, err.max()
 
 
+# ---------------------------------------------------- gather high-water mark
+def test_paged_gather_clamps_to_live_high_water_mark(key):
+    """The fallback gather must materialize only up to the last live block
+    column, not always the full cache_len (satellite fix: the eager /
+    interpreter path keeps working, just smaller)."""
+    cfg = get_config("smollm-135m").reduced()
+    plan = derive_plan(cfg, MESH1, batch=2, seq_len=8, training=False)
+    serve = _serve(cfg, max_seq_len=64, block_size=4)  # 16-wide tables
+    pools = init_paged_cache(cfg, plan, serve)
+    e0 = jax.tree.map(lambda x: x[0], pools["layers"]["stack"][0])["paged"]
+    # only blocks in columns 0..1 are live -> gather stops at 2 blocks
+    table = jnp.zeros((2, serve.max_blocks_per_seq), jnp.int32)
+    table = table.at[0, :2].set(jnp.array([1, 2]))
+    table = table.at[1, :1].set(jnp.array([3]))
+    kf, vf = paged_gather(e0, table, serve.block_size)
+    assert kf.shape[1] == 2 * serve.block_size
+    # all-trash tables (idle batch) still yield one block, not zero
+    kt, _ = paged_gather(e0, jnp.zeros_like(table), serve.block_size)
+    assert kt.shape[1] == serve.block_size
+    # explicit override and the jit path keep the full extent available
+    kx, _ = paged_gather(e0, table, serve.block_size, max_blocks=4)
+    assert kx.shape[1] == 4 * serve.block_size
+
+
+def test_paged_update_valid_mask_routes_dead_rows_to_trash(key):
+    """Mixed-slab writes: rows past a slot's ``kinds`` count must land in
+    the trash block, never in the slot's own (or anyone else's) pages."""
+    cfg = get_config("smollm-135m").reduced()
+    plan = derive_plan(cfg, MESH1, batch=2, seq_len=8, training=False)
+    serve = _serve(cfg)
+    pools = init_paged_cache(cfg, plan, serve)
+    e0 = jax.tree.map(lambda x: x[0], pools["layers"]["stack"][0])["paged"]
+    B, S, KV, Dh = 2, 4, cfg.n_kv_heads, cfg.d_head
+    k = jax.random.normal(key, (B, S, KV, Dh), jnp.float32)
+    table = jnp.array([[1, 2, 0, 0, 0, 0, 0, 0], [3, 4, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    valid = jnp.array([[True] * 4, [True, False, False, False]])
+    flat = np.asarray(paged_flat_slots(table, pos, serve.block_size, valid))
+    bs = serve.block_size
+    assert (flat[1, 1:] < bs).all()  # dead rows -> trash block extent
+    assert (flat[0] >= bs).all() and flat[1, 0] >= bs  # live rows -> own pages
+    # a full masked update leaves the dead rows' would-be pages untouched
+    e1 = paged_update(e0, k, k, pos, table, bs, valid)
+    np.testing.assert_array_equal(
+        np.asarray(e1["k"])[4, 1:], np.zeros((bs - 1, KV, Dh))
+    )
+    # positions past the table extent (a decode row's dead tail) must clamp,
+    # not index out of range
+    far = pos + serve.max_blocks_per_seq * bs
+    paged_flat_slots(table, far, bs, jnp.zeros_like(valid))
+
+
 # --------------------------------------------------------------- scheduler
+def _drive_slab(s, serve, token=7):
+    """One host-side engine iteration against a fake device step."""
+    s.admit(10**9)
+    s.grow_for_decode()
+    tokens, tables, lens, kinds = s.slab_view(serve.mixed_slab_width)
+    s.slab_done(np.full((serve.decode_batch,), token, np.int64), kinds)
+    return kinds
+
+
 def test_scheduler_eviction_and_recovery():
     """Pool too small for both runners: youngest is evicted (recompute
     preemption), re-admitted after the elder finishes, stream still drains."""
@@ -128,21 +189,11 @@ def test_scheduler_eviction_and_recovery():
     s.submit(r1)
     s.admit(0)
     assert {r0.state, r1.state} == {"prefill"}
-    for r in (r0, r1):
-        s.prefill_chunk_done(r, first_token=11)
-    evicted = False
-    for _ in range(30):
-        if not s.running():
-            s.admit(99)
-            for r in s.slots:
-                if r is not None and r.state == "prefill":
-                    s.prefill_chunk_done(r, first_token=11)
-            if not s.running():
-                break
-        s.grow_for_decode()
-        evicted = evicted or s.n_evictions > 0
-        s.decode_done(np.full((serve.decode_batch,), 7, np.int64))
-    assert evicted and s.n_evictions >= 1
+    for _ in range(40):
+        if s.idle:
+            break
+        _drive_slab(s, serve)
+    assert s.n_evictions >= 1
     assert {len(r.out) for r in (r0, r1)} == {9}
     assert r0.state == "done" and r1.state == "done"
     assert s.alloc.available == 8  # everything returned to the pool
@@ -153,50 +204,67 @@ def test_grow_preempts_mid_prefill_holder_instead_of_crashing():
     runner must preempt the younger prefill slot, not raise pool-exhausted
     (regression: victims used to be drawn from running() only)."""
     cfg = get_config("smollm-135m").reduced()
-    serve = _serve(cfg, decode_batch=2, block_size=2, prefill_chunk=4, max_seq_len=16)
+    serve = _serve(
+        cfg, decode_batch=2, block_size=2, prefill_chunk=4, max_seq_len=16,
+        mixed_slab_width=4,
+    )
     serve = dataclasses.replace(serve, n_blocks=1 + 7)
     s = Scheduler(serve)
-    r0 = Request(rid="a", prompt=[1, 2, 3, 4], max_new_tokens=8)
-    r1 = Request(rid="b", prompt=[5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=2)
+    r0 = Request(rid="a", prompt=[1, 2, 3, 4], max_new_tokens=8, arrival=0)
+    r1 = Request(rid="b", prompt=[5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=2,
+                 arrival=1)
     s.submit(r0)
     s.submit(r1)
-    s.admit(0)  # r0: 2 blocks, r1: 4 blocks (padded prompt), 1 free
-    s.prefill_chunk_done(r0, first_token=3)  # r0 RUNNING
-    s.prefill_chunk_done(r1, None)  # r1 mid-prefill, holding its blocks
+    s.admit(0)  # r0 admitted alone: 2 blocks
+    tokens, tables, lens, kinds = s.slab_view(4)
+    s.slab_done(np.full((2,), 3, np.int64), kinds)  # r0 RUNNING
+    s.admit(1)  # r1 takes 4 blocks, 1 free; stays mid-prefill (8 > slab 4)
+    tokens, tables, lens, kinds = s.slab_view(4)
+    assert r1.state == "prefill" and r1.blocks
     for _ in range(4):  # r0 decodes until the pool runs dry
         s.grow_for_decode()
-        s.decode_done(np.full((serve.decode_batch,), 7, np.int64))
+        _, _, _, kinds = s.slab_view(4)
+        s.slab_done(np.full((2,), 7, np.int64), kinds)
     assert s.n_evictions == 1
     assert r1.state == "waiting" and not r1.blocks
     assert r0.state == "running" and len(r0.out) == 5
 
 
-def test_decode_view_shields_mid_prefill_slots():
-    """The batched decode writes a dummy token for every non-running slot;
-    those writes must land in the trash block, never in pages a mid-prefill
-    request already owns (regression: decode between two prefill chunks used
-    to overwrite the request's position 0)."""
+def test_slab_view_masks_idle_and_mid_prefill_rows():
+    """Slab packing invariants: an idle slot's row is dead (kinds 0, table
+    all-trash); a mid-prefill slot carries its own chunk at its own offset
+    and its dead rows resolve to the trash block, never its pages."""
     cfg = get_config("smollm-135m").reduced()
-    serve = _serve(cfg, decode_batch=2, block_size=4, prefill_chunk=4, max_seq_len=32)
+    serve = _serve(
+        cfg, decode_batch=3, block_size=4, prefill_chunk=4, max_seq_len=32
+    )
     s = Scheduler(serve)
     r0 = Request(rid="run", prompt=[1, 2, 3, 4], max_new_tokens=4)
     r1 = Request(rid="pre", prompt=[5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=4)
     s.submit(r0)
     s.submit(r1)
     s.admit(0)
-    s.prefill_chunk_done(r0, first_token=3)  # r0 RUNNING
-    s.prefill_chunk_done(r1, None)  # r1 half prefilled (pos 4 of 8)
-    assert r1.state == "prefill" and r1.blocks
-    table, lens = s.decode_view()
-    assert table[r0.slot].tolist() == s.table[r0.slot].tolist()
-    assert table[r1.slot].tolist() == [0] * serve.max_blocks_per_seq
-    assert lens[r1.slot] == 0
-    # the dummy write for r1's slot resolves to the trash block, not its pages
-    flat = paged_flat_slots(
-        jnp.asarray(table), jnp.asarray(lens)[:, None], serve.block_size
+    _, _, _, kinds = s.slab_view(4)
+    s.slab_done(np.full((3,), 3, np.int64), kinds)  # r0 RUNNING, r1 pos=4
+    assert r0.state == "running" and r1.state == "prefill" and r1.pos == 4
+    tokens, tables, lens, kinds = s.slab_view(4)
+    assert kinds[r0.slot] == 1 and tokens[r0.slot, 0] == 3
+    assert kinds[r1.slot] == 4 and lens[r1.slot] == 4
+    assert tokens[r1.slot].tolist() == [9, 10, 11, 12]
+    idle = next(b for b in range(3) if s.slots[b] is None)
+    assert kinds[idle] == 0 and tables[idle].tolist() == [0] * tables.shape[1]
+    # dead rows of the decode slot route to the trash block, not its pages
+    pos = lens[:, None] + np.arange(4)[None]
+    valid = np.arange(4)[None] < kinds[:, None]
+    flat = np.asarray(
+        paged_flat_slots(
+            jnp.asarray(tables), jnp.asarray(pos), serve.block_size,
+            jnp.asarray(valid),
+        )
     )
-    assert int(flat[r1.slot, 0]) < serve.block_size  # trash block extent
-    assert all(int(flat[r1.slot, 0]) // serve.block_size != b for b in r1.blocks)
+    bs = serve.block_size
+    assert (flat[r0.slot, 1:] < bs).all() and (flat[idle] < bs).all()
+    assert all(f // bs in r1.blocks for f in flat[r1.slot])
 
 
 def test_scheduler_rejects_oversized_request():

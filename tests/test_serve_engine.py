@@ -1,5 +1,6 @@
 """Continuous-batching engine: greedy-token parity with the eager path,
-static-shape steps under request churn, plan-driven knobs, sharded serving."""
+ONE static-shape unified mixed step under request churn, plan-driven knobs,
+sharded serving, and the no-dense-gather guarantee of the fused kernel."""
 import dataclasses
 
 import jax
@@ -41,8 +42,9 @@ def _oracle(params, cfg, plan, prompt, gen):
 
 def test_engine_matches_greedy_generate_staggered(key):
     """Mixed prompt lengths + staggered arrivals through the scheduler must
-    produce exactly the eager path's greedy tokens — and one trace per step
-    kind, however the stream churns (the no-retrace acceptance bar)."""
+    produce exactly the eager path's greedy tokens — and ONE trace of the
+    single unified step, however the stream churns (the no-retrace +
+    one-step-kind acceptance bar)."""
     cfg, plan, serve, params = _setup(key)
     rng = np.random.default_rng(0)
     lengths = [5, 8, 12, 12, 3, 9]
@@ -52,12 +54,32 @@ def test_engine_matches_greedy_generate_staggered(key):
         for i, p in enumerate(prompts)
     ]
     engine = ServingEngine(params, cfg, plan, serve)
+    assert engine.fused  # single-device default is the Pallas kernel path
     got = engine.run(reqs)
     for i, p in enumerate(prompts):
         want = _oracle(params, cfg, plan, p, 6)
         assert got[f"r{i}"] == want, (i, got[f"r{i}"], want)
-    assert engine.trace_counts == {"prefill": 1, "decode": 1}
+    assert engine.trace_counts == {"step": 1}
     assert engine.summary()["mean_occupancy"] > 0.3
+
+
+def test_engine_swa_wraparound_matches_oracle(key):
+    """Sliding-window arch (mixtral-reduced, window 16) with contexts past
+    the window: the kernel's window masking must skip the slot's own oldest
+    pages and still match the eager path exactly."""
+    cfg, plan, serve, params = _setup(key, arch="mixtral-8x7b")
+    assert cfg.sliding_window == 16
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (20, 7, 25)]
+    reqs = [
+        Request(rid=f"w{i}", prompt=p, max_new_tokens=8)
+        for i, p in enumerate(prompts)
+    ]
+    engine = ServingEngine(params, cfg, plan, serve)
+    got = engine.run(reqs)
+    for i, p in enumerate(prompts):
+        assert got[f"w{i}"] == _oracle(params, cfg, plan, p, 8)
+    assert engine.trace_counts == {"step": 1}
 
 
 def test_engine_slot_reuse_keeps_parity(key):
@@ -74,7 +96,7 @@ def test_engine_slot_reuse_keeps_parity(key):
     assert len(got) == 5
     for i, p in enumerate(prompts):
         assert got[f"s{i}"] == _oracle(params, cfg, plan, p, 4)
-    assert engine.trace_counts == {"prefill": 1, "decode": 1}
+    assert engine.trace_counts == {"step": 1}
 
 
 def test_engine_eviction_preserves_tokens(key):
@@ -113,6 +135,22 @@ def test_engine_int8_kv_runs_and_is_deterministic(key):
     assert all(len(v) == 5 for v in a.values())
 
 
+def test_engine_fallback_gather_path_matches_fused(key):
+    """The jnp gather fallback (model-sharded meshes) and the fused kernel
+    are the same op: identical greedy tokens, still one step kind."""
+    cfg, plan, serve, params = _setup(key)
+    rng = np.random.default_rng(6)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(3)]
+    reqs = lambda: (
+        Request(rid=f"f{i}", prompt=p, max_new_tokens=5)
+        for i, p in enumerate(prompts)
+    )
+    fused = ServingEngine(params, cfg, plan, serve, fused=True)
+    fallback = ServingEngine(params, cfg, plan, serve, fused=False)
+    assert fused.run(reqs()) == fallback.run(reqs())
+    assert fallback.trace_counts == {"step": 1}
+
+
 def test_engine_sharded_mesh_matches_single(key):
     """Decode through dist.Shardings on whatever host mesh exists (CI runs
     4 fake devices -> (data=1, model=4)): tokens must equal the unsharded
@@ -136,6 +174,55 @@ def test_engine_sharded_mesh_matches_single(key):
     assert got == want
 
 
+def _dense_cache_gathers(jaxpr, cache_len):
+    """Gather eqns producing a (B, cache_len, ...) dense-cache buffer — the
+    signature of ``paged_gather`` materializing the whole table."""
+    found = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "gather":
+                for ov in eqn.outvars:
+                    shp = ov.aval.shape
+                    if len(shp) >= 3 and shp[1] == cache_len:
+                        found.append(shp)
+            for sub in eqn.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                for s in subs:
+                    if hasattr(s, "jaxpr"):
+                        walk(s.jaxpr)
+
+    walk(jaxpr)
+    return found
+
+
+def test_unified_step_jaxpr_has_no_dense_gather(key):
+    """The acceptance bar of the fused kernel: no dense (B, cache_len, ...)
+    gather is ever materialized inside the unified step — the only gathers
+    left are the (B, W)-sized embedding/table lookups.  The gather fallback
+    is the positive control: its jaxpr must show the dense buffer."""
+    cfg, plan, serve, params = _setup(key)
+    B, W = serve.decode_batch, serve.mixed_slab_width
+    args = (
+        params,
+        ServingEngine(params, cfg, plan, serve).pools,
+        jnp.zeros((B, W), jnp.int32),
+        jnp.zeros((B, serve.max_blocks_per_seq), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,), jnp.int32),
+    )
+
+    def jaxpr_of(engine):
+        return jax.make_jaxpr(lambda *a: engine._step.__wrapped__(*a))(*args).jaxpr
+
+    fused = ServingEngine(params, cfg, plan, serve, fused=True)
+    assert _dense_cache_gathers(jaxpr_of(fused), serve.max_seq_len) == [], (
+        "dense cache_len gather in the unified fused step"
+    )
+    fallback = ServingEngine(params, cfg, plan, serve, fused=False)
+    assert _dense_cache_gathers(jaxpr_of(fallback), serve.max_seq_len)
+
+
 # ----------------------------------------------------------- plan-driven
 def test_serve_plan_derivation_roofline_and_capacity():
     cfg = get_config("smollm-135m")
@@ -152,6 +239,38 @@ def test_serve_plan_derivation_roofline_and_capacity():
     sp8 = derive_serve_plan(cfg, MESH1, tiny, max_seq_len=2048)
     assert sp8.kv_dtype == "int8"
     assert sp8.decode_batch < sp.decode_batch
+
+
+def test_serve_plan_kernel_knobs():
+    """pages-per-tile comes from the VMEM budget (and divides the table);
+    the mixed-slab width defaults to the prefill chunk."""
+    cfg = get_config("smollm-135m")
+    sp = derive_serve_plan(cfg, MESH1, TPU_V5E, max_seq_len=2048)
+    assert sp.mixed_slab_width == sp.prefill_chunk
+    assert sp.max_blocks_per_seq % sp.pages_per_tile == 0
+    assert sp.fused_attention
+    # a VMEM-starved chip must take more, smaller tile sweeps
+    small = dataclasses.replace(TPU_V5E, vmem_bytes=64 * 1024)
+    sp_small = derive_serve_plan(cfg, MESH1, small, max_seq_len=2048)
+    assert sp_small.pages_per_tile < sp.pages_per_tile
+    # knobs are overridable
+    sp_o = derive_serve_plan(
+        cfg, MESH1, TPU_V5E, max_seq_len=2048, mixed_slab_width=4, pages_per_tile=2
+    )
+    assert sp_o.mixed_slab_width == 4 and sp_o.pages_per_tile == 2
+
+
+def test_serve_plan_gather_tax_caps_fallback_batch():
+    """The roofline's gather-bytes term only exists on the fallback path:
+    the dense write+read of a full-context cache per slot per step stops
+    the gather engine's batch from amortizing the weight stream, so the
+    fused plan must admit at least as many decode slots."""
+    cfg = get_config("smollm-135m")
+    fused = derive_serve_plan(cfg, MESH1, TPU_V5E, max_seq_len=32768)
+    gather = derive_serve_plan(
+        cfg, MESH1, TPU_V5E, max_seq_len=32768, fused_attention=False
+    )
+    assert gather.decode_batch < fused.decode_batch
 
 
 def test_serve_plan_model_axis_scales_batch():
