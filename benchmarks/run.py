@@ -10,6 +10,7 @@ def main() -> None:
         fig5_batch_sweep,
         paged_attn_bench,
         serve_sweep,
+        spec_decode_bench,
         table2_parallel_modes,
         table5_utilization,
         table6_stage_perf,
@@ -26,6 +27,7 @@ def main() -> None:
         fig5_batch_sweep,
         serve_sweep,
         paged_attn_bench,
+        spec_decode_bench,
     ):
         try:
             mod.run()

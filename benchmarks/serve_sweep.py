@@ -67,22 +67,57 @@ def serving_smoke(arch: str = "smollm-135m", out: str = "BENCH_serve.json") -> d
     s = _drive(cfg, decode_batch=4, n_requests=6, prompt_len=32, gen=12, stagger=2)
     record = {
         "arch": arch,
+        # output tokens only — prompt rows ride in prefill_tokens, so the
+        # headline tokens/s can no longer be inflated by prefill traffic
         "tokens_per_s": s["tok_per_s"],
-        "decode_tokens": s["decode_tokens"],
+        "generated_tokens": s["generated_tokens"],
         "prefill_tokens": s["prefill_tokens"],
         "steps": s["steps"],
         "fused_attention": s["fused_attention"],
         "mean_occupancy": s["mean_occupancy"],
         "evictions": s["evictions"],
         "traces": s["traces"],
+        "latency_s": s["latency_s"],
+        "ttft_s": s["ttft_s"],
         "wall_s": s["wall_s"],
         "serve_plan": s["serve_plan"],
+        "spec_smoke": _spec_smoke(cfg),
     }
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {out}: {record['tokens_per_s']:.1f} tok/s "
-          f"occupancy={record['mean_occupancy']:.2f}")
+          f"occupancy={record['mean_occupancy']:.2f} "
+          f"spec_traces={record['spec_smoke']['traces']}")
     return record
+
+
+def _spec_smoke(cfg) -> dict:
+    """Serving-smoke invariant: speculation must not retrace the unified
+    step (gamma varies per slot per iteration, but only ``kinds`` *values*
+    change — any retrace here is a static-shape regression)."""
+    from repro.serve.scheduler import random_stream
+    from repro.serve.speculative import NGramDraft
+
+    mesh = {"data": 1, "model": 1}
+    plan = derive_plan(cfg, mesh, TPU_V5E, batch=4, seq_len=32, training=False)
+    serve = derive_serve_plan(
+        cfg, mesh, TPU_V5E, max_seq_len=64, decode_batch=4, prefill_chunk=16,
+        mixed_slab_width=8, draft="ngram", spec_len=2,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    engine = ServingEngine(params, cfg, plan, serve, draft=NGramDraft())
+    engine.run(random_stream(cfg, 4, 16, 8, stagger=1, seed=3))
+    s = engine.summary()
+    assert engine.trace_counts == {"step": 1}, (
+        f"speculation retraced the unified step: {engine.trace_counts}"
+    )
+    return {
+        "traces": dict(engine.trace_counts),
+        "spec_len": serve.spec_len,
+        "draft": serve.draft,
+        "acceptance_rate": s["spec"]["acceptance_rate"],
+        "tokens_per_spec_step": s["spec"]["tokens_per_spec_step"],
+    }
 
 
 def run() -> list[str]:

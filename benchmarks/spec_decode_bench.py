@@ -1,0 +1,172 @@
+"""Speculative decoding: acceptance-rate x tokens/step sweep.
+
+Sweeps (draft source, gamma, context) on the reduced config and records,
+per point, the draft acceptance rate and the mean output tokens per
+speculating slot-step (1.0 = plain decode; > 1 means the free MXU slack is
+buying real tokens).  Draft sources:
+
+* ``ngram``  — prompt-lookup self-drafting (host-side, model-free);
+* ``self``   — the target model drafting for itself (the acceptance *upper
+  bound*: every draft matches, so tokens/step == gamma+1 minus end-of-
+  request truncation — labelled honestly as an oracle, not a deployment);
+* ``model``  — an independently initialized copy of the same reduced config.
+  NOTE: random-init models collapse to a shared repeat-token attractor
+  (tied embeddings make "repeat the last token" the argmax), so this row's
+  acceptance is attractor-inflated — it is NOT a deployment floor; only
+  trained draft/target pairs measure real cross-model acceptance.
+
+Two entry points, same shape as ``serve_sweep``:
+
+* ``spec_smoke(arch, out)`` — CI hook: run the sweep, assert greedy-token
+  parity against the non-speculative engine and ONE trace of both the
+  unified step and the draft step, and write ``BENCH_spec.json`` next to
+  BENCH_serve.json.
+* ``run()`` — benchmarks/run.py hook: emit ``spec/<draft>-g<g>-ctx<c>``
+  CSV rows.
+
+    PYTHONPATH=src:. python -m benchmarks.spec_decode_bench --smoke \
+        --out BENCH_spec.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.plan import derive_plan, derive_serve_plan
+from repro.models.params import init_params
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import Request
+from repro.serve.speculative import NGramDraft, make_draft_source
+
+MESH1 = {"data": 1, "model": 1}
+
+
+def _stream(cfg, prompt_len: int, gen: int, n: int = 4, seed: int = 7):
+    """Half random prompts, half repetitive ones (prompt-lookup's habitat)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if i % 2:
+            pat = list(rng.integers(0, cfg.vocab_size, max(2, prompt_len // 4)))
+            p = (pat * prompt_len)[:prompt_len]
+        else:
+            p = list(rng.integers(0, cfg.vocab_size, prompt_len))
+        reqs.append(Request(rid=f"s{i:02d}", prompt=p, max_new_tokens=gen,
+                            arrival=i))
+    return reqs
+
+
+def _draft_for(name: str, cfg, serve, params):
+    if name == "ngram":
+        return NGramDraft()
+    if name == "self":  # oracle: the target drafts for itself
+        return make_draft_source(cfg.name[: -len("-reduced")], cfg, serve,
+                                 hw=TPU_V5E, params=params, reduced=True)
+    # independent random weights of the same reduced config
+    return make_draft_source(cfg.name[: -len("-reduced")], cfg, serve,
+                             hw=TPU_V5E, seed=99, reduced=True)
+
+
+def sweep(arch: str = "smollm-135m", gammas=(1, 2, 4), contexts=(16, 48),
+          gen: int = 12) -> list[dict]:
+    cfg = get_config(arch).reduced()
+    plan = derive_plan(cfg, MESH1, TPU_V5E, batch=4, seq_len=max(contexts),
+                       training=False)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    records = []
+    for ctx in contexts:
+        base_kw = dict(
+            max_seq_len=max(64, ctx + gen + 1), decode_batch=4, block_size=8,
+            kv_dtype="fp32", prefill_chunk=min(ctx, 16),
+        )
+        plain_serve = derive_serve_plan(cfg, MESH1, TPU_V5E, **base_kw)
+        plain = ServingEngine(params, cfg, plan, plain_serve)
+        want = plain.run(_stream(cfg, ctx, gen))
+        for name in ("ngram", "self", "model"):
+            for g in gammas:
+                serve = derive_serve_plan(
+                    cfg, MESH1, TPU_V5E, **base_kw, draft=name, spec_len=g
+                )
+                draft = _draft_for(name, cfg, serve, params)
+                eng = ServingEngine(params, cfg, plan, serve, draft=draft)
+                t0 = time.perf_counter()
+                got = eng.run(_stream(cfg, ctx, gen))
+                wall = time.perf_counter() - t0
+                s = eng.summary()
+                assert got == want, f"spec parity broken: {name} g={g} ctx={ctx}"
+                assert eng.trace_counts == {"step": 1}, eng.trace_counts
+                dtr = s["spec"]["draft_traces"]
+                assert dtr is None or sum(dtr.values()) <= 1, dtr
+                records.append({
+                    "draft": name,
+                    "gamma": g,
+                    "context": ctx,
+                    "acceptance_rate": s["spec"]["acceptance_rate"],
+                    "tokens_per_spec_step": s["spec"]["tokens_per_spec_step"],
+                    "generated_tokens": s["generated_tokens"],
+                    "steps": s["steps"],
+                    "wall_s": wall,
+                    "parity": True,
+                    "traces": s["traces"],
+                })
+    return records
+
+
+def spec_smoke(arch: str = "smollm-135m", out: str = "BENCH_spec.json") -> dict:
+    records = sweep(arch)
+    best = max(
+        (r for r in records if r["tokens_per_spec_step"]),
+        key=lambda r: r["tokens_per_spec_step"],
+    )
+    record = {
+        "arch": arch + "-reduced",
+        "points": records,
+        "best": best,
+        "all_parity": all(r["parity"] for r in records),
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(
+        f"wrote {out}: {len(records)} points; best {best['draft']} "
+        f"gamma={best['gamma']} ctx={best['context']}: "
+        f"{best['tokens_per_spec_step']:.2f} tok/spec-step "
+        f"(acceptance {best['acceptance_rate']:.2f})"
+    )
+    return record
+
+
+def run() -> list[str]:
+    """benchmarks/run.py hook: one CSV row per sweep point."""
+    out = []
+    for r in sweep(gammas=(1, 2), contexts=(16,), gen=8):
+        acc = r["acceptance_rate"]
+        tps = r["tokens_per_spec_step"]
+        out.append(
+            emit(
+                f"spec/{r['draft']}-g{r['gamma']}-ctx{r['context']}",
+                r["wall_s"] * 1e6,
+                f"acc={acc if acc is None else round(acc, 2)};"
+                f"tok_step={tps if tps is None else round(tps, 2)}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--out", default="BENCH_spec.json")
+    a = ap.parse_args()
+    if a.smoke:
+        spec_smoke(a.arch, a.out)
+    else:
+        run()

@@ -431,6 +431,19 @@ class ServePlan:
     # roofline charges the fallback its gather bytes, so this knob feeds the
     # decode-batch derivation too.
     fused_attention: bool = True
+    # Speculative decoding: draft depth per decode slot (gamma).  A
+    # speculating slot submits spec_len drafted tokens + its real one as
+    # gamma+1 slab rows — mechanically a prefill chunk — and the host keeps
+    # the longest draft prefix matching the step's greedy argmax.  0 = off.
+    # Derived from the roofline's compute-vs-bandwidth slack: decode is
+    # bandwidth-bound, so the MXU has (machine_balance / decode_batch) rows
+    # of free compute per slot before verification itself would go
+    # compute-bound (then gamma stays 0).  Always <= mixed_slab_width - 1.
+    spec_len: int = 0
+    # Draft source label: "none" | "ngram" (prompt-lookup self-drafting) |
+    # a config name (model drafting, e.g. "smollm-135m").  The engine takes
+    # the actual DraftSource object; the plan records the decision.
+    draft: str = "none"
     # Diagnostics (logged + dryrun records).
     kv_bytes_per_token: int = 0
     hbm_kv_budget_bytes: int = 0
@@ -446,7 +459,8 @@ class ServePlan:
             f"block_size={self.block_size} n_blocks={self.n_blocks} "
             f"kv_dtype={self.kv_dtype} prefill_chunk={self.prefill_chunk} "
             f"slab={self.mixed_slab_width} pages/tile={self.pages_per_tile} "
-            f"fused={self.fused_attention} max_seq={self.max_seq_len} "
+            f"fused={self.fused_attention} spec_len={self.spec_len} "
+            f"draft={self.draft} max_seq={self.max_seq_len} "
             f"kv_bytes/token={self.kv_bytes_per_token}"
         )
 
@@ -462,6 +476,8 @@ class ServePlan:
             "mixed_slab_width": self.mixed_slab_width,
             "pages_per_tile": self.pages_per_tile,
             "fused_attention": self.fused_attention,
+            "spec_len": self.spec_len,
+            "draft": self.draft,
             "max_seq_len": self.max_seq_len,
             "kv_bytes_per_token": self.kv_bytes_per_token,
         }
@@ -514,6 +530,8 @@ def derive_serve_plan(
     mixed_slab_width: Optional[int] = None,
     pages_per_tile: Optional[int] = None,
     fused_attention: bool = True,
+    spec_len: Optional[int] = None,
+    draft: str = "none",
     slack_blocks: int = 0,
     oversubscribe: float = 1.0,
 ) -> ServePlan:
@@ -544,6 +562,15 @@ def derive_serve_plan(
       tiles in VMEM; the tile height is the largest block-table divisor
       whose tiles fit an eighth of the chip's VMEM (the rest holds q, the
       accumulator and the output block).
+    * **speculative draft depth (gamma)** — the joint-constraint answer to
+      "how many draft rows per slot can verification absorb for free":
+      decode at batch B is bandwidth-bound (B below the machine balance
+      point), so one weight stream amortizes ``machine_balance / B`` query
+      rows per slot before the MXU goes compute-bound.  gamma+1 must stay
+      within that slack *and* within the slab width, else gamma drops to 0
+      (verification must never slow the step it is trying to speed up).
+      Only derived when a ``draft`` source is named; explicit ``spec_len``
+      overrides (still clamped to the slab).
 
     ``oversubscribe`` scales the block pool relative to the worst case
     (every slot at ``max_seq_len``).  At the default 1.0 the pool can host
@@ -604,6 +631,20 @@ def derive_serve_plan(
         )
         tile_cap = max(1, (hw.vmem_bytes // 8) // max(2 * page_bytes, 1))
         pages_per_tile = largest_divisor_of(max_blocks_per_seq, tile_cap)
+    if spec_len is None:
+        if draft == "none":
+            spec_len = 0
+        else:
+            # Compute slack per decode slot: the weight stream takes
+            # weight_bytes / bw while one verified row costs
+            # decode_batch * 2P/ma flops across the batch — both scale the
+            # same way with TP, so slack rows/slot = machine_balance / B.
+            # gamma+1 <= slack keeps verification bandwidth-bound; the -1
+            # converts rows to drafts, and the cap of 8 bounds the verify
+            # logits width (diminishing returns far before the slab does).
+            slack = hw.machine_balance_bf16 / max(int(decode_batch), 1)
+            spec_len = max(0, min(int(slack) - 1, 8))
+    spec_len = max(0, min(int(spec_len), int(mixed_slab_width) - 1))
     return ServePlan(
         arch=cfg.name,
         decode_batch=int(decode_batch),
@@ -615,6 +656,8 @@ def derive_serve_plan(
         mixed_slab_width=int(mixed_slab_width),
         pages_per_tile=int(pages_per_tile),
         fused_attention=bool(fused_attention),
+        spec_len=int(spec_len),
+        draft=str(draft),
         max_seq_len=int(max_seq_len),
         kv_bytes_per_token=int(kv_tok),
         hbm_kv_budget_bytes=kv_budget,

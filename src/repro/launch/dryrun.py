@@ -213,14 +213,18 @@ def run_cell(arch, shape, *, multi_pod, force=False, out_dir=RESULTS,
                         else 0.0
                     ),
                     # serving cells also record the derived serve knobs
-                    # (decode batch / block size / KV dtype) so the
-                    # plan->serve mapping is inspectable per mesh
+                    # (decode batch / block size / KV dtype / speculative
+                    # draft depth) so the plan->serve mapping is
+                    # inspectable per mesh; draft="ngram" (the model-free
+                    # source every arch can run) makes the record show the
+                    # roofline-slack gamma this cell would get
                     "serve": (
                         derive_serve_plan(
                             cfg,
                             mesh_axes_dict(mesh),
                             TPU_V5E,
                             max_seq_len=shape.seq_len,
+                            draft="ngram",
                         ).to_record()
                         if shape.kind in ("decode", "prefill")
                         and serve_feasible(cfg)[0]

@@ -5,6 +5,12 @@ fallback.
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --requests 8 --prompt-len 32 --gen 16 --stagger 2
 
+    # speculative decoding: a small model drafts, the big model verifies
+    # gamma+1 rows per slot in the same mixed slab (tokens are identical
+    # to plain decode; only the speed changes):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --draft smollm-135m --requests 8 --prompt-len 32 --gen 16
+
     # eager whole-batch greedy decode (non-attention archs serve here):
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b-reduced \
         --engine eager --batch 4 --prompt-len 32 --gen 16
@@ -32,6 +38,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models.params import init_params
 from repro.serve.engine import ServingEngine, greedy_generate
 from repro.serve.scheduler import random_stream
+from repro.serve.speculative import make_draft_source
 
 
 def run_batched(a, cfg, mesh) -> dict:
@@ -48,13 +55,21 @@ def run_batched(a, cfg, mesh) -> dict:
         pages_per_tile=a.pages_per_tile,
         fused_attention=not a.no_fused,
         kv_dtype=a.kv_dtype,
+        draft=a.draft or "none",
+        spec_len=a.spec_len,
     )
     print(plan.describe())
     print(serve.describe())
     sh = Shardings(mesh, plan, cfg)
     params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
     params = jax.device_put(params, sh.param_shardings(params))
-    engine = ServingEngine(params, cfg, plan, serve, shardings=sh)
+    draft = None
+    if a.draft and serve.spec_len == 0:
+        print("roofline slack leaves no free verification rows at this "
+              "decode batch: speculation stays off (gamma = 0)")
+    elif a.draft:
+        draft = make_draft_source(a.draft, cfg, serve, hw=TPU_V5E, seed=2)
+    engine = ServingEngine(params, cfg, plan, serve, shardings=sh, draft=draft)
     if engine.fused != serve.fused_attention:
         print("multi-device mesh: unified step falls back to the gather path "
               "(Pallas kernel is single-device for now)")
@@ -122,6 +137,13 @@ def main():
                          "Pallas paged-attention kernel")
     ap.add_argument("--kv-dtype", default=None,
                     choices=[None, "bf16", "int8", "fp32"])
+    ap.add_argument("--draft", default=None,
+                    help="speculative draft source: 'ngram' (prompt-lookup "
+                         "self-drafting) or a config name (e.g. smollm-135m "
+                         "drafting for a larger --arch)")
+    ap.add_argument("--spec-len", type=int, default=None,
+                    help="draft depth gamma per decode slot (default: derived "
+                         "from the roofline's compute slack; 0 disables)")
     a = ap.parse_args()
 
     cfg = get_config(a.arch)

@@ -103,6 +103,14 @@ def init_cache(
 # keeps static shapes with no per-request branching.  The int8 page option
 # reuses ``train/compression.quantize`` on a per-(token, kv-head) grid (the
 # paper's Int8 deployment precision applied to the cache).
+#
+# Rollback invariant (speculative decoding rides on this): pages past a
+# slot's per-slot length hold arbitrary stale KV — rejected draft rows,
+# leftovers from a block's previous owner — and both attention paths mask
+# by the length vector, never by page contents.  Rolling a slot back past
+# rejected positions is therefore just shrinking its length: the block
+# table keeps the blocks, and the next ``paged_update`` at those positions
+# overwrites the stale rows in place.
 # ---------------------------------------------------------------------------
 def _kv_vec_scale(x: jax.Array) -> jax.Array:
     """Int8 grid per (token, kv-head) vector: max |x| over d_head / 127."""

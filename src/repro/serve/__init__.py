@@ -2,17 +2,29 @@ from repro.serve.engine import (
     ServingEngine,
     greedy_generate,
     make_decode_step,
+    make_mixed_step,
     make_prefill_step,
 )
 from repro.serve.scheduler import BlockAllocator, Request, Scheduler, random_stream
+from repro.serve.speculative import (
+    ModelDraft,
+    NGramDraft,
+    make_draft_source,
+    prompt_lookup,
+)
 
 __all__ = [
     "ServingEngine",
     "greedy_generate",
     "make_decode_step",
+    "make_mixed_step",
     "make_prefill_step",
     "BlockAllocator",
     "Request",
     "Scheduler",
     "random_stream",
+    "ModelDraft",
+    "NGramDraft",
+    "make_draft_source",
+    "prompt_lookup",
 ]

@@ -92,6 +92,73 @@ def greedy_generate(
 # ---------------------------------------------------------------------------
 # Continuous batching
 # ---------------------------------------------------------------------------
+def make_mixed_step(
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    serve: ServePlan,
+    *,
+    fused: bool,
+    shard: Callable = Identity,
+    spec_width: int = 1,
+    trace: Optional[dict] = None,
+    trace_key: str = "step",
+):
+    """Build the ONE jitted unified mixed prefill/decode step.
+
+    ``step(params, pools, tokens (B, W), tables (B, MB), lens (B,),
+    kinds (B,))`` returns ``(tok, vtok, pools)``: ``tok[b]`` is the greedy
+    token at slot b's last live row; ``vtok`` (B, spec_width) is the greedy
+    argmax at each of the slot's leading rows — the verification targets of
+    speculative decoding (row i scores the token that should follow the
+    slot's i-th slab token).  With ``spec_width == 1`` no extra logits are
+    computed and ``vtok`` is just ``tok[:, None]``.
+
+    Shared by :class:`ServingEngine` and the model drafter
+    (``serve/speculative.ModelDraft``) — the drafter is mechanically a
+    second, smaller serving engine riding the same slab contract."""
+    page_state = {
+        "block_size": serve.block_size,
+        "fused": bool(fused),
+        "pages_per_tile": serve.pages_per_tile,
+    }
+
+    def step_fn(params, pools, tokens, tables, lens, kinds):
+        if trace is not None:
+            trace[trace_key] += 1
+        cache = {"layers": pools["layers"], "t": lens}
+        x, nc, _ = forward(
+            params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
+            shard=shard,
+            page_state={**page_state, "table": tables, "q_lens": kinds},
+        )
+        # per-slot greedy token at the last live row (kinds-1; row 0 for
+        # decode slots, the final prompt token on a last prefill chunk)
+        idx = jnp.maximum(kinds - 1, 0)
+        xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
+        if spec_width > 1:
+            # verification targets: the target model's own greedy choice
+            # after every leading row (drafted rows ride rows 1..gamma)
+            vtok = jnp.argmax(logits_fn(params, x[:, :spec_width], cfg), axis=-1)
+        else:
+            vtok = tok[:, None]
+        return tok, vtok, {"layers": nc["layers"]}
+
+    return jax.jit(step_fn, donate_argnums=(1,))
+
+
+def _percentiles(xs: list) -> Optional[dict]:
+    if not xs:
+        return None
+    arr = np.asarray(xs, np.float64)
+    return {
+        "mean": float(arr.mean()),
+        "p50": float(np.percentile(arr, 50)),
+        "p90": float(np.percentile(arr, 90)),
+        "p99": float(np.percentile(arr, 99)),
+    }
+
+
 class ServingEngine:
     """Continuous-batching serving over the paged KV cache.
 
@@ -107,7 +174,17 @@ class ServingEngine:
 
     The scheduler packs the slab per iteration: admit, grow, one mixed
     step.  ``trace_counts`` proves there is no per-request retracing — it
-    stays at {"step": 1} however the stream churns.
+    stays at {"step": 1} however the stream churns, including with
+    speculative decoding on (draft depth varies per slot per iteration, but
+    only the *values* of ``kinds`` change, never a shape).
+
+    ``draft`` (a ``serve/speculative`` DraftSource) + ``serve.spec_len`` > 0
+    turn decode slots speculative: each running slot's drafted continuation
+    rides its slab row as gamma+1 rows (mechanically a prefill chunk), the
+    step scores every row, and the host keeps the longest draft prefix that
+    matches the target's own greedy argmax — output tokens are identical to
+    the non-speculative engine by construction, rollback is just the
+    per-slot length vector.
     """
 
     def __init__(
@@ -119,6 +196,7 @@ class ServingEngine:
         *,
         shardings=None,
         fused: Optional[bool] = None,
+        draft=None,
     ):
         ok, reason = serve_feasible(cfg)
         if not ok:
@@ -141,65 +219,86 @@ class ServingEngine:
                 shardings is None or shardings.mesh.size == 1
             )
         self.fused = bool(fused)
+        self.draft = draft
+        self.spec_len = serve.spec_len if draft is not None else 0
+        if self.spec_len >= serve.mixed_slab_width and serve.mixed_slab_width > 0:
+            # plan clamps this already; belt-and-braces for hand-built plans
+            self.spec_len = serve.mixed_slab_width - 1
         self.trace_counts = {"step": 0}
         self.iteration = 0
         self.stats = {
-            "steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-            "occupancy_sum": 0.0,
+            "steps": 0, "prefill_tokens": 0, "generated_tokens": 0,
+            "draft_rows": 0, "accepted_drafts": 0, "spec_slots": 0,
+            "spec_generated": 0, "occupancy_sum": 0.0,
         }
-        page_state = {
-            "block_size": serve.block_size,
-            "fused": self.fused,
-            "pages_per_tile": serve.pages_per_tile,
-        }
-
-        def step_fn(params, pools, tokens, tables, lens, kinds):
-            self.trace_counts["step"] += 1
-            cache = {"layers": pools["layers"], "t": lens}
-            x, nc, _ = forward(
-                params, {"tokens": tokens}, cfg=cfg, plan=plan, cache=cache,
-                shard=shard,
-                page_state={**page_state, "table": tables, "q_lens": kinds},
-            )
-            # per-slot greedy token at the last live row (kinds-1; row 0 for
-            # decode slots, the final prompt token on a last prefill chunk)
-            idx = jnp.maximum(kinds - 1, 0)
-            xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-            tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
-            return tok, {"layers": nc["layers"]}
-
-        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        # verify-row width follows the *engine's* draft-gated depth, not the
+        # plan's: a speculative plan served without a draft source must not
+        # pay spec_len+1 rows of discarded vocab logits every step
+        self._step = make_mixed_step(
+            cfg, plan, serve, fused=self.fused, shard=shard,
+            spec_width=self.spec_len + 1 if self.spec_len > 0 else 1,
+            trace=self.trace_counts,
+        )
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
     def reset_stats(self) -> None:
-        """Zero the throughput counters and the iteration clock (e.g. after a
-        jit-warmup stream) — request arrivals are absolute iterations, so the
-        clock must restart or a post-warmup 'staggered' stream arrives as a
-        burst.  Compiled step caches and pool contents are left alone."""
+        """Zero the throughput counters, finished-request latency samples and
+        the iteration clock (e.g. after a jit-warmup stream) — request
+        arrivals are absolute iterations, so the clock must restart or a
+        post-warmup 'staggered' stream arrives as a burst.  Compiled step
+        caches and pool contents are left alone."""
         for k in self.stats:
             self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
         self.stats.pop("wall_s", None)
+        self.sched.finished = []
         self.iteration = 0
 
+    def _propose_drafts(self) -> dict:
+        """Ask the draft source for each running slot's continuation.
+
+        Depth per slot degrades gracefully: never more than the plan's
+        gamma, never past the slab width (gamma+1 rows must fit next to the
+        slot's real token), and never drafting tokens the request has no
+        budget left to emit — a slot with no headroom simply decodes
+        plainly.  Returns {rid: [draft tokens]}."""
+        cap = min(self.spec_len, self.serve.mixed_slab_width - 1)
+        if self.draft is None or cap <= 0:
+            return {}
+        asks = []
+        for req in self.sched.running():
+            n = min(cap, req.max_new_tokens - len(req.out) - 1)
+            if n > 0:
+                asks.append((req.rid, req.prompt + req.out, n))
+        if not asks:
+            return {}
+        props = self.draft.propose(asks)
+        return {rid: list(d) for rid, d in props.items() if d}
+
     def step(self) -> None:
-        """One engine iteration: admit -> grow -> one unified mixed step."""
+        """One engine iteration: admit -> draft -> grow -> one unified mixed
+        step -> accept/rollback."""
         s = self.sched
         s.admit(self.iteration)
-        s.grow_for_decode()
+        drafts = self._propose_drafts()
+        s.grow_for_decode({rid: len(d) for rid, d in drafts.items()})
         if s.busy():
-            tokens, tables, lens, kinds = s.slab_view(self.serve.mixed_slab_width)
-            n_decode = len(s.running())
-            n_prefill = int(kinds.sum()) - n_decode
-            sampled, self.pools = self._step(
+            tokens, tables, lens, kinds = s.slab_view(
+                self.serve.mixed_slab_width, drafts
+            )
+            sampled, vtok, self.pools = self._step(
                 self.params, self.pools, tokens, tables, lens, kinds
             )
-            s.slab_done(np.asarray(sampled), kinds)
+            c = s.slab_done(np.asarray(sampled), kinds, np.asarray(vtok), drafts)
             self.stats["steps"] += 1
-            self.stats["decode_tokens"] += n_decode
-            self.stats["prefill_tokens"] += n_prefill
+            self.stats["prefill_tokens"] += c["prefill"]
+            self.stats["generated_tokens"] += c["generated"]
+            self.stats["draft_rows"] += c["draft_rows"]
+            self.stats["accepted_drafts"] += c["accepted_drafts"]
+            self.stats["spec_slots"] += c["spec_slots"]
+            self.stats["spec_generated"] += c["spec_generated"]
             self.stats["occupancy_sum"] += (
                 int((kinds > 0).sum()) / self.serve.decode_batch
             )
@@ -218,22 +317,58 @@ class ServingEngine:
         return {r.rid: list(r.out) for r in self.sched.finished}
 
     def summary(self) -> dict:
+        """Engine accounting.  ``tok_per_s`` counts *emitted output tokens*
+        only — not slab rows: prompt rows are reported separately as
+        ``prefill_tokens`` and rejected draft rows are never counted, so
+        throughput cannot be inflated by prefill traffic or by speculation
+        that verifies nothing."""
         d = max(self.stats["steps"], 1)
+        fin = self.sched.finished
+        spec_on = self.draft is not None and self.spec_len > 0
         return {
             "iterations": self.iteration,
             "steps": self.stats["steps"],
             "prefill_tokens": self.stats["prefill_tokens"],
-            "decode_tokens": self.stats["decode_tokens"],
+            "generated_tokens": self.stats["generated_tokens"],
             "mean_occupancy": self.stats["occupancy_sum"] / d,
             "evictions": self.sched.n_evictions,
             "traces": dict(self.trace_counts),
             "fused_attention": self.fused,
             "wall_s": self.stats.get("wall_s"),
             "tok_per_s": (
-                (self.stats["prefill_tokens"] + self.stats["decode_tokens"])
-                / self.stats["wall_s"]
+                self.stats["generated_tokens"] / self.stats["wall_s"]
                 if self.stats.get("wall_s")
                 else None
             ),
+            "latency_s": _percentiles(
+                [r.t_done - r.t_admit for r in fin if r.t_done and r.t_admit]
+            ),
+            "ttft_s": _percentiles(
+                [r.t_first - r.t_admit for r in fin if r.t_first and r.t_admit]
+            ),
+            "spec": {
+                "enabled": spec_on,
+                "spec_len": self.spec_len,
+                "draft": self.serve.draft,
+                "draft_rows": self.stats["draft_rows"],
+                "accepted_drafts": self.stats["accepted_drafts"],
+                "acceptance_rate": (
+                    self.stats["accepted_drafts"] / self.stats["draft_rows"]
+                    if self.stats["draft_rows"]
+                    else None
+                ),
+                # mean output tokens per speculating slot-step (> 1 means
+                # speculation is beating plain decode on those steps)
+                "tokens_per_spec_step": (
+                    self.stats["spec_generated"] / self.stats["spec_slots"]
+                    if self.stats["spec_slots"]
+                    else None
+                ),
+                "draft_traces": (
+                    dict(self.draft.trace_counts)
+                    if spec_on and hasattr(self.draft, "trace_counts")
+                    else None
+                ),
+            },
             "serve_plan": self.serve.to_record(),
         }

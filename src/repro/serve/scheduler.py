@@ -28,6 +28,7 @@ Policy (Orca-style iteration-level scheduling, token-level batching):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -118,6 +119,10 @@ class Request:
     blocks: list[int] = dataclasses.field(default_factory=list)
     pos: int = 0  # prompt tokens prefilled so far
     out: list[int] = dataclasses.field(default_factory=list)
+    # -- latency bookkeeping (wall clock; summary percentiles) --
+    t_admit: Optional[float] = None  # first admitted into a slot
+    t_first: Optional[float] = None  # first output token sampled
+    t_done: Optional[float] = None  # generation complete
 
     @property
     def done(self) -> bool:
@@ -172,6 +177,8 @@ class Scheduler:
             req.state, req.slot, req.blocks, req.pos, req.out = (
                 PREFILL, slot, blocks, 0, [],
             )
+            if req.t_admit is None:  # re-admission after eviction keeps t0
+                req.t_admit = time.perf_counter()
             self.slots[slot] = req
             self.table[slot] = 0
             self.table[slot, : len(blocks)] = blocks
@@ -181,7 +188,7 @@ class Scheduler:
     def busy(self) -> bool:
         return any(s is not None for s in self.slots)
 
-    def slab_view(self, width: int):
+    def slab_view(self, width: int, drafts: Optional[dict] = None):
         """Pack one engine iteration's (B, W) token slab.
 
         Returns (tokens, tables, lens, kinds) as numpy arrays:
@@ -189,7 +196,14 @@ class Scheduler:
         idle slot (whole row dead, table zeroed to the trash block), 1 for
         a decode slot (its last sampled token), up to W for a prefill slot
         (its next prompt chunk).  ``lens[b]`` is the absolute position of
-        the row's first token."""
+        the row's first token.
+
+        ``drafts`` ({rid: [draft tokens]}, speculative decoding) turns a
+        running slot's row into a gamma+1-token verification chunk: its
+        last sampled token followed by the drafted continuation.  Keyed by
+        rid, not slot, so drafts for a request evicted (or recycled) between
+        proposal and packing are dropped on the floor instead of riding an
+        unrelated slot."""
         B = self.serve.decode_batch
         tokens = np.zeros((B, width), np.int32)
         tables = np.zeros_like(self.table)
@@ -200,9 +214,12 @@ class Scheduler:
                 continue
             tables[b] = self.table[b]
             if req.state == RUNNING:
-                tokens[b, 0] = req.out[-1]
+                row = [req.out[-1]]
+                if drafts:
+                    row += list(drafts.get(req.rid, ()))[: width - 1]
+                tokens[b, : len(row)] = row
                 lens[b] = self.lens[b]
-                kinds[b] = 1
+                kinds[b] = len(row)
             elif req.state == PREFILL:
                 chunk = req.prompt[req.pos : req.pos + width]
                 tokens[b, : len(chunk)] = chunk
@@ -210,28 +227,82 @@ class Scheduler:
                 kinds[b] = len(chunk)
         return tokens, tables, lens, kinds
 
-    def slab_done(self, sampled: np.ndarray, kinds: np.ndarray) -> None:
+    def slab_done(
+        self,
+        sampled: np.ndarray,
+        kinds: np.ndarray,
+        vtok: Optional[np.ndarray] = None,
+        drafts: Optional[dict] = None,
+    ) -> dict:
         """Consume one unified step's per-slot sampled tokens ((B,) int).
 
         ``sampled[b]`` is the greedy token at the slot's last live row — a
         running slot's next token, or (on the final prompt chunk) the
-        request's first output token; mid-chunk samples are discarded."""
+        request's first output token; mid-chunk samples are discarded.
+
+        Speculative slots (``drafts[rid]`` rode the slab) are verified
+        against ``vtok`` ((B, spec_len+1): the greedy argmax at each of the
+        slot's leading rows): the longest draft prefix matching the target's
+        own greedy choices is accepted, and every emitted token is one the
+        target would have produced serially — acceptance changes speed,
+        never tokens.  Rollback past rejected rows is just the per-slot
+        length vector (`lens[b] += len(emitted)` instead of += gamma+1);
+        the block table is untouched and the stale KV the dead rows wrote
+        past the new length is masked by the kernel and overwritten when
+        the slot next advances.
+
+        Returns this step's accounting: output tokens actually emitted
+        (``generated``), prompt rows consumed (``prefill``), and the
+        speculation counters (draft rows submitted / accepted, slots that
+        speculated, tokens they emitted)."""
+        now = time.perf_counter()
+        c = {
+            "generated": 0, "prefill": 0, "draft_rows": 0,
+            "accepted_drafts": 0, "spec_slots": 0, "spec_generated": 0,
+        }
+
+        def finish(b, req):
+            req.t_done = now
+            req.state = DONE
+            self._release(req)
+            self.finished.append(req)
+
         for b, req in enumerate(self.slots):
             if req is None or kinds[b] == 0:
                 continue
             if req.state == RUNNING:
-                self.lens[b] += 1
-                req.out.append(int(sampled[b]))
+                k = int(kinds[b])
+                d = list((drafts or {}).get(req.rid, ()))[: k - 1] if k > 1 else []
+                if d:
+                    v = vtok[b]
+                    a = 0
+                    while a < len(d) and int(v[a]) == int(d[a]):
+                        a += 1
+                    room = req.max_new_tokens - len(req.out)
+                    emit = [int(v[i]) for i in range(min(a + 1, room))]
+                    c["draft_rows"] += len(d)
+                    c["accepted_drafts"] += a
+                    c["spec_slots"] += 1
+                    c["spec_generated"] += len(emit)
+                else:
+                    emit = [int(sampled[b])]
+                self.lens[b] += len(emit)
+                req.out.extend(emit)
+                c["generated"] += len(emit)
                 if req.done:
-                    req.state = DONE
-                    self._release(req)
-                    self.finished.append(req)
+                    finish(b, req)
             elif req.state == PREFILL:
                 req.pos += int(kinds[b])
+                c["prefill"] += int(kinds[b])
                 if req.pos >= len(req.prompt):
                     req.out.append(int(sampled[b]))
+                    c["generated"] += 1
+                    req.t_first = now
                     req.state = RUNNING
                     self.lens[b] = len(req.prompt)
+                    if req.done:  # max_new_tokens == 1
+                        finish(b, req)
+        return c
 
     # -------------------------------------------------------------- decode
     def running(self) -> list[Request]:
@@ -247,16 +318,23 @@ class Scheduler:
             s for s in self.slots if s is not None and s.state in (PREFILL, RUNNING)
         ]
 
-    def grow_for_decode(self) -> None:
+    def grow_for_decode(self, extra_rows: Optional[dict] = None) -> None:
         """Ensure every running slot has a block for the position it is
         about to write; when the pool runs dry a requester may only evict
         runners strictly *younger* than itself — if there is none it
         preempts itself instead.  The oldest request therefore always keeps
-        its pages and finishes (no eviction livelock)."""
+        its pages and finishes (no eviction livelock).
+
+        ``extra_rows`` ({rid: n}) covers speculative slots: a slot about to
+        verify n draft rows writes KV at n positions past its real token,
+        so its block run must reach that high-water mark *before* the step
+        (rejected rows roll back the length only — the blocks stay)."""
+        extra_rows = extra_rows or {}
         for req in sorted(self.running(), key=lambda r: (r.arrival, r.rid)):
             if req.state != RUNNING:  # evicted as a victim earlier in this loop
                 continue
-            need = self._blocks_for(int(self.lens[req.slot]) + 1) - len(req.blocks)
+            rows = 1 + int(extra_rows.get(req.rid, 0))
+            need = self._blocks_for(int(self.lens[req.slot]) + rows) - len(req.blocks)
             while need > 0:
                 got = self.alloc.alloc(need)
                 if got is not None:
