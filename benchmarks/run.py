@@ -8,6 +8,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         fig5_batch_sweep,
+        multitenant_bench,
         paged_attn_bench,
         serve_sweep,
         spec_decode_bench,
@@ -28,6 +29,7 @@ def main() -> None:
         serve_sweep,
         paged_attn_bench,
         spec_decode_bench,
+        multitenant_bench,
     ):
         try:
             mod.run()

@@ -444,6 +444,20 @@ class ServePlan:
     # a config name (model drafting, e.g. "smollm-135m").  The engine takes
     # the actual DraftSource object; the plan records the decision.
     draft: str = "none"
+    # Copy-on-write prefix sharing: the scheduler keeps a radix index over
+    # resident token prefixes and admits prefix-hit requests with shared
+    # (refcounted) blocks + only the divergent tail as prefill.  Greedy
+    # outputs are byte-identical either way (KV pages are a pure function
+    # of the token prefix); the knob exists for A/B accounting and as the
+    # escape hatch, not because sharing changes results.
+    prefix_sharing: bool = True
+    # Fleet-default TTFT target (ms) that shaped this plan, when one did:
+    # the derivation widens the mixed slab so a typical prompt prefils
+    # within the target and reins in gamma (draft rows compete with prompt
+    # chunks for slab width).  Per-request targets on ``Request.slo_ttft_ms``
+    # drive the scheduler's runtime chunk sizing; this field records the
+    # planning-time decision.  None = throughput-shaped plan.
+    slo_ttft_ms: Optional[float] = None
     # Diagnostics (logged + dryrun records).
     kv_bytes_per_token: int = 0
     hbm_kv_budget_bytes: int = 0
@@ -460,7 +474,8 @@ class ServePlan:
             f"kv_dtype={self.kv_dtype} prefill_chunk={self.prefill_chunk} "
             f"slab={self.mixed_slab_width} pages/tile={self.pages_per_tile} "
             f"fused={self.fused_attention} spec_len={self.spec_len} "
-            f"draft={self.draft} max_seq={self.max_seq_len} "
+            f"draft={self.draft} prefix_sharing={self.prefix_sharing} "
+            f"slo_ttft_ms={self.slo_ttft_ms} max_seq={self.max_seq_len} "
             f"kv_bytes/token={self.kv_bytes_per_token}"
         )
 
@@ -478,6 +493,8 @@ class ServePlan:
             "fused_attention": self.fused_attention,
             "spec_len": self.spec_len,
             "draft": self.draft,
+            "prefix_sharing": self.prefix_sharing,
+            "slo_ttft_ms": self.slo_ttft_ms,
             "max_seq_len": self.max_seq_len,
             "kv_bytes_per_token": self.kv_bytes_per_token,
         }
@@ -534,6 +551,9 @@ def derive_serve_plan(
     draft: str = "none",
     slack_blocks: int = 0,
     oversubscribe: float = 1.0,
+    prefix_sharing: bool = True,
+    slo_ttft_ms: Optional[float] = None,
+    typical_prompt_len: Optional[int] = None,
 ) -> ServePlan:
     """Pick decode batch / block size / KV dtype from the roofline model.
 
@@ -571,6 +591,14 @@ def derive_serve_plan(
       (verification must never slow the step it is trying to speed up).
       Only derived when a ``draft`` source is named; explicit ``spec_len``
       overrides (still clamped to the slab).
+    * **SLO feedback** — a fleet TTFT target (``slo_ttft_ms``) feeds back
+      into the slab and gamma: steps are weight-stream-bound (>=
+      weight_bytes / hbm_bandwidth each), so the target fixes a step
+      budget, the slab widens until ``typical_prompt_len`` prefils inside
+      it, and gamma is reined in to ``slack // 2 - 1`` (draft rows compete
+      with prompt chunks for slab width).  Per-request targets
+      (``Request.slo_ttft_ms``) additionally drive runtime chunk sizing in
+      the scheduler against *measured* step times.
 
     ``oversubscribe`` scales the block pool relative to the worst case
     (every slot at ``max_seq_len``).  At the default 1.0 the pool can host
@@ -621,6 +649,16 @@ def derive_serve_plan(
         prefill_chunk = min(max_seq_len, max(block_size, 256))
     if mixed_slab_width is None:
         mixed_slab_width = prefill_chunk
+    if slo_ttft_ms is not None:
+        # TTFT feedback (same joint-constraint style as the decode batch):
+        # decode steps are weight-stream-bound, so one step costs at least
+        # weight_bytes / hbm_bandwidth — that bounds how many steps fit in
+        # the TTFT budget, and a typical prompt must prefill within them.
+        # Widen the slab until it does (never narrow a wider request).
+        est_step_s = weight_bytes / max(hw.hbm_bandwidth, 1.0)
+        steps_budget = max(1, int((slo_ttft_ms / 1e3) / max(est_step_s, 1e-12)))
+        need = -(-int(typical_prompt_len or max_seq_len) // steps_budget)
+        mixed_slab_width = max(int(mixed_slab_width), need)
     mixed_slab_width = max(1, min(mixed_slab_width, max_seq_len))
     if pages_per_tile is None:
         # one pool page in VMEM: (block_size, n_kv_heads, d_head) values
@@ -644,6 +682,13 @@ def derive_serve_plan(
             # logits width (diminishing returns far before the slab does).
             slack = hw.machine_balance_bf16 / max(int(decode_batch), 1)
             spec_len = max(0, min(int(slack) - 1, 8))
+    if slo_ttft_ms is not None:
+        # Under a TTFT target draft rows compete with prompt chunks for the
+        # slab and lengthen the very steps the target budgets, so gamma only
+        # keeps the slack it can *halve*: rein it in to slack//2 - 1 (0 when
+        # the roofline slack is thin).
+        slack = hw.machine_balance_bf16 / max(int(decode_batch), 1)
+        spec_len = min(int(spec_len), max(0, int(slack) // 2 - 1))
     spec_len = max(0, min(int(spec_len), int(mixed_slab_width) - 1))
     return ServePlan(
         arch=cfg.name,
@@ -658,6 +703,8 @@ def derive_serve_plan(
         fused_attention=bool(fused_attention),
         spec_len=int(spec_len),
         draft=str(draft),
+        prefix_sharing=bool(prefix_sharing),
+        slo_ttft_ms=None if slo_ttft_ms is None else float(slo_ttft_ms),
         max_seq_len=int(max_seq_len),
         kv_bytes_per_token=int(kv_tok),
         hbm_kv_budget_bytes=kv_budget,

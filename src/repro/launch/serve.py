@@ -11,21 +11,32 @@ fallback.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --draft smollm-135m --requests 8 --prompt-len 32 --gen 16
 
+    # multi-tenant trace replay: two tenants, each with a shared system
+    # prompt, driving a heterogeneous class mix with per-class latency
+    # percentiles (prefix sharing makes the shared prompts one prefill):
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        --trace chat:4,summarize:2,classify:2 --tenant-mix 2 --max-seq 512
+
     # eager whole-batch greedy decode (non-attention archs serve here):
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b-reduced \
         --engine eager --batch 4 --prompt-len 32 --gen 16
 
-The batched path derives an :class:`ExecutionPlan` (mesh decisions) *and* a
-:class:`ServePlan` (decode batch / block size / KV dtype / prefill chunk)
-from the same (arch, mesh, hardware) triple, places params through
-``dist.Shardings`` so a model-sharded mesh serves correctly, and prints the
-plan + engine summary (tokens/s, batch occupancy) at the end.
+All serving knobs live in one :class:`ServeArgs` record whose
+``plan_overrides()`` maps 1:1 onto :func:`repro.core.plan.derive_serve_plan`
+keyword arguments — the CLI flags are just its spellings (old flag names
+all keep working).  The batched path derives an :class:`ExecutionPlan`
+(mesh decisions) *and* a :class:`ServePlan` from the same (arch, mesh,
+hardware) triple, places params through ``dist.Shardings`` so a
+model-sharded mesh serves correctly, and prints the plan + engine summary
+(tokens/s, batch occupancy, prefix-sharing hit rates) at the end.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,28 +47,94 @@ from repro.core.plan import derive_plan, derive_serve_plan, serve_feasible
 from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.params import init_params
-from repro.serve.engine import ServingEngine, greedy_generate
-from repro.serve.scheduler import random_stream
-from repro.serve.speculative import make_draft_source
+from repro.serve import (
+    ServingEngine,
+    greedy_generate,
+    make_draft_source,
+    make_trace,
+    parse_mix,
+    per_class_report,
+    random_stream,
+)
 
 
-def run_batched(a, cfg, mesh) -> dict:
+@dataclasses.dataclass
+class ServeArgs:
+    """Every serving-launcher knob, CLI-independent.
+
+    The fields group into (a) workload shape (requests / prompt-len / gen /
+    stagger, or a ``trace`` workload-mix spec with ``tenant_mix`` tenants)
+    and (b) plan overrides — the latter map 1:1 onto
+    :func:`derive_serve_plan` keywords via :meth:`plan_overrides`, so
+    adding a plan knob means adding a field + one mapping entry, not new
+    plumbing."""
+
+    arch: str
+    engine: str = "batched"
+    batch: int = 4
+    fix_batch: bool = False
+    requests: int = 8
+    prompt_len: int = 32
+    gen: int = 16
+    stagger: int = 2
+    # ---- ServePlan overrides (1:1 with derive_serve_plan keywords) ----
+    max_seq: int = 2048
+    prefill_chunk: Optional[int] = None
+    slab_width: Optional[int] = None
+    pages_per_tile: Optional[int] = None
+    no_fused: bool = False
+    kv_dtype: Optional[str] = None
+    draft: Optional[str] = None
+    spec_len: Optional[int] = None
+    no_prefix_sharing: bool = False
+    slo_ttft_ms: Optional[float] = None
+    # ---- multi-tenant trace replay ----
+    trace: Optional[str] = None  # workload mix, e.g. "chat:4,classify:2"
+    tenant_mix: int = 2  # tenants sharing per-tenant system prompts
+
+    @classmethod
+    def from_namespace(cls, ns: argparse.Namespace) -> "ServeArgs":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in vars(ns).items() if k in names})
+
+    def plan_overrides(self) -> dict:
+        """Keyword arguments for :func:`derive_serve_plan`."""
+        return {
+            "max_seq_len": self.max_seq,
+            "decode_batch": self.batch if self.fix_batch else None,
+            "prefill_chunk": self.prefill_chunk,
+            "mixed_slab_width": self.slab_width,
+            "pages_per_tile": self.pages_per_tile,
+            "fused_attention": not self.no_fused,
+            "kv_dtype": self.kv_dtype,
+            "draft": self.draft or "none",
+            "spec_len": self.spec_len,
+            "prefix_sharing": not self.no_prefix_sharing,
+            "slo_ttft_ms": self.slo_ttft_ms,
+            "typical_prompt_len": self.prompt_len,
+        }
+
+    def request_stream(self, cfg) -> list:
+        if self.trace:
+            return make_trace(
+                cfg,
+                parse_mix(self.trace),
+                tenants=self.tenant_mix,
+                stagger=self.stagger,
+                seed=1,
+                max_tokens=self.max_seq,
+            )
+        return random_stream(
+            cfg, self.requests, self.prompt_len, self.gen, self.stagger, seed=1
+        )
+
+
+def run_batched(a: ServeArgs, cfg, mesh) -> dict:
     plan = derive_plan(
         cfg, dict(mesh.shape), TPU_V5E,
         batch=a.batch, seq_len=a.prompt_len, training=False,
     )
-    serve = derive_serve_plan(
-        cfg, dict(mesh.shape), TPU_V5E,
-        max_seq_len=a.max_seq,
-        decode_batch=a.batch if a.fix_batch else None,
-        prefill_chunk=a.prefill_chunk,
-        mixed_slab_width=a.slab_width,
-        pages_per_tile=a.pages_per_tile,
-        fused_attention=not a.no_fused,
-        kv_dtype=a.kv_dtype,
-        draft=a.draft or "none",
-        spec_len=a.spec_len,
-    )
+    serve = derive_serve_plan(cfg, dict(mesh.shape), TPU_V5E, **a.plan_overrides())
     print(plan.describe())
     print(serve.describe())
     sh = Shardings(mesh, plan, cfg)
@@ -73,16 +150,17 @@ def run_batched(a, cfg, mesh) -> dict:
     if engine.fused != serve.fused_attention:
         print("multi-device mesh: unified step falls back to the gather path "
               "(Pallas kernel is single-device for now)")
-    reqs = random_stream(cfg, a.requests, a.prompt_len, a.gen, a.stagger, seed=1)
-    out = engine.run(reqs)
+    out = engine.run(a.request_stream(cfg))
     summary = engine.summary()
     first = next(iter(out))
     print(f"served {len(out)} requests; {first} -> {out[first]}")
+    if a.trace:
+        summary["classes"] = per_class_report(engine.sched.finished)
     print(json.dumps(summary, indent=1, default=str))
     return summary
 
 
-def run_eager(a, cfg, mesh) -> dict:
+def run_eager(a: ServeArgs, cfg, mesh) -> dict:
     plan = derive_plan(
         cfg, dict(mesh.shape), TPU_V5E,
         batch=a.batch, seq_len=a.prompt_len, training=False,
@@ -112,7 +190,7 @@ def run_eager(a, cfg, mesh) -> dict:
     return {"tok_per_s": a.batch * a.gen / dt}
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--engine", default="batched", choices=["batched", "eager"])
@@ -144,8 +222,24 @@ def main():
     ap.add_argument("--spec-len", type=int, default=None,
                     help="draft depth gamma per decode slot (default: derived "
                          "from the roofline's compute slack; 0 disables)")
-    a = ap.parse_args()
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prefix sharing (A/B baseline; "
+                         "outputs are byte-identical either way)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="fleet TTFT target fed back into the plan "
+                         "(slab width, draft depth)")
+    ap.add_argument("--trace", default=None,
+                    help="multi-tenant trace replay: workload mix spec like "
+                         "'chat:4,summarize:2,classify:2' (replaces "
+                         "--requests/--prompt-len/--gen)")
+    ap.add_argument("--tenant-mix", type=int, default=2,
+                    help="tenants in the trace; each gets a shared system "
+                         "prompt its requests all carry")
+    return ap
 
+
+def main():
+    a = ServeArgs.from_namespace(build_parser().parse_args())
     cfg = get_config(a.arch)
     mesh = make_host_mesh()
     if a.engine == "batched" and not serve_feasible(cfg)[0]:

@@ -154,6 +154,30 @@ def init_paged_cache(cfg: ArchConfig, plan: ExecutionPlan, serve) -> PyTree:
     return {"layers": {"stack": stack, "tail": tail}}
 
 
+def paged_copy_block(pools: PyTree, src, dst) -> PyTree:
+    """Copy one block's pages ``src -> dst`` across every layer pool.
+
+    The copy-on-write fork of prefix sharing (docs/ARCHITECTURE.md §"Prefix
+    sharing"): when a new request diverges *inside* a resident shared block,
+    the scheduler allocates it a fresh block and the engine duplicates the
+    matched pages there before its next step — the resident block is never
+    written by a sharer.  Copies every leaf (k/v and, for int8 pools, the
+    quantization scales), so the fork is byte-identical by construction.
+
+    ``src``/``dst`` may be traced scalars: callers jit this once and reuse
+    it for every fork (block ids are data, not shapes)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    layers = pools["layers"]
+    stack = (
+        jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]), layers["stack"])
+        if layers["stack"] is not None
+        else None
+    )
+    tail = jax.tree.map(lambda x: x.at[dst].set(x[src]), layers["tail"])
+    return {"layers": {"stack": stack, "tail": tail}}
+
+
 def paged_flat_slots(
     table: jax.Array,
     positions: jax.Array,

@@ -1,30 +1,59 @@
+"""``repro.serve`` — the public serving API.
+
+The documented surface is deliberately small:
+
+* :class:`Request` — one request: ``Request(prompt, max_new_tokens,
+  tenant=, priority=, slo_ttft_ms=, tag=)`` (multi-tenant descriptors are
+  keyword-only; everything after them in the dataclass is scheduler-owned
+  runtime state).
+* :class:`ServingEngine` — the continuous-batching engine; its contract is
+  ``submit()`` / ``run()`` / ``summary()``.
+* :func:`make_draft_source` — speculative-decoding draft factory
+  (:class:`NGramDraft` / :class:`ModelDraft` are its products; construct
+  through the factory unless a test needs one directly).
+* ``random_stream`` / ``make_trace`` / ``parse_mix`` / ``per_class_report``
+  / ``WORKLOADS`` — synthetic streams and multi-tenant trace workloads.
+* ``greedy_generate`` and the eager ``make_prefill_step`` /
+  ``make_decode_step`` — the whole-batch fallback path (also the parity
+  oracle).
+
+Everything else (``Scheduler``, ``BlockAllocator``, ``PrefixIndex``,
+``make_mixed_step``, the slab-packing helpers) is engine internals:
+importable from their modules for tests and extensions, but not part of the
+stable seam — PR 7+ should build on the names in ``__all__``.
+"""
+
 from repro.serve.engine import (
     ServingEngine,
     greedy_generate,
     make_decode_step,
-    make_mixed_step,
     make_prefill_step,
 )
-from repro.serve.scheduler import BlockAllocator, Request, Scheduler, random_stream
-from repro.serve.speculative import (
-    ModelDraft,
-    NGramDraft,
-    make_draft_source,
-    prompt_lookup,
+from repro.serve.scheduler import Request, random_stream
+from repro.serve.speculative import make_draft_source
+from repro.serve.workload import (
+    WORKLOADS,
+    WorkloadClass,
+    make_trace,
+    parse_mix,
+    per_class_report,
 )
 
 __all__ = [
+    # engine
     "ServingEngine",
-    "greedy_generate",
-    "make_decode_step",
-    "make_mixed_step",
-    "make_prefill_step",
-    "BlockAllocator",
     "Request",
-    "Scheduler",
-    "random_stream",
-    "ModelDraft",
-    "NGramDraft",
+    # draft sources
     "make_draft_source",
-    "prompt_lookup",
+    # streams / workloads
+    "random_stream",
+    "WORKLOADS",
+    "WorkloadClass",
+    "make_trace",
+    "parse_mix",
+    "per_class_report",
+    # eager fallback + oracle
+    "greedy_generate",
+    "make_prefill_step",
+    "make_decode_step",
 ]

@@ -32,7 +32,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.plan import ExecutionPlan, ServePlan, serve_feasible
-from repro.models.cache import cache_from_prefill, init_paged_cache
+from repro.models.cache import (
+    cache_from_prefill,
+    init_paged_cache,
+    paged_copy_block,
+)
 from repro.models.transformer import forward, logits_fn
 from repro.serve.scheduler import Request, Scheduler
 
@@ -147,6 +151,13 @@ def make_mixed_step(
     return jax.jit(step_fn, donate_argnums=(1,))
 
 
+def _by_tenant(finished: list) -> dict:
+    groups: dict = {}
+    for r in finished:
+        groups.setdefault(r.tenant, []).append(r)
+    return groups
+
+
 def _percentiles(xs: list) -> Optional[dict]:
     if not xs:
         return None
@@ -229,8 +240,13 @@ class ServingEngine:
         self.stats = {
             "steps": 0, "prefill_tokens": 0, "generated_tokens": 0,
             "draft_rows": 0, "accepted_drafts": 0, "spec_slots": 0,
-            "spec_generated": 0, "occupancy_sum": 0.0,
+            "spec_generated": 0, "fork_copies": 0, "occupancy_sum": 0.0,
         }
+        # copy-on-write fork: one jitted block copy, reused for every fork
+        # (block ids are data, not shapes — compiles once, retraces never;
+        # deliberately NOT counted in ``trace_counts``, which is the mixed
+        # step's no-retrace invariant)
+        self._copy = jax.jit(paged_copy_block, donate_argnums=(0,))
         # verify-row width follows the *engine's* draft-gated depth, not the
         # plan's: a speculative plan served without a draft source must not
         # pay spec_len+1 rows of discarded vocab logits every step
@@ -267,6 +283,10 @@ class ServingEngine:
         cap = min(self.spec_len, self.serve.mixed_slab_width - 1)
         if self.draft is None or cap <= 0:
             return {}
+        if self.sched._slo_pressure():
+            # draft rows widen every runner's slab share; while an SLO'd
+            # prefill is at risk that width belongs to prompt chunks
+            return {}
         asks = []
         for req in self.sched.running():
             n = min(cap, req.max_new_tokens - len(req.out) - 1)
@@ -278,20 +298,39 @@ class ServingEngine:
         return {rid: list(d) for rid, d in props.items() if d}
 
     def step(self) -> None:
-        """One engine iteration: admit -> draft -> grow -> one unified mixed
-        step -> accept/rollback."""
+        """One engine iteration: admit -> fork copies -> draft -> grow ->
+        one unified mixed step -> accept/rollback.
+
+        Fork copies are applied immediately after admission, before anything
+        can release blocks (growth/eviction run later in the iteration), so
+        a copy's source block is still resident when the device reads it."""
         s = self.sched
         s.admit(self.iteration)
+        for src, dst in s.drain_copies():
+            self.pools = self._copy(
+                self.pools, jnp.int32(src), jnp.int32(dst)
+            )
+            self.stats["fork_copies"] += 1
         drafts = self._propose_drafts()
-        s.grow_for_decode({rid: len(d) for rid, d in drafts.items()})
+        s._grow_for_decode({rid: len(d) for rid, d in drafts.items()})
         if s.busy():
-            tokens, tables, lens, kinds = s.slab_view(
+            tokens, tables, lens, kinds = s._slab_view(
                 self.serve.mixed_slab_width, drafts
             )
+            traces_before = self.trace_counts["step"]
+            t0 = time.perf_counter()
             sampled, vtok, self.pools = self._step(
                 self.params, self.pools, tokens, tables, lens, kinds
             )
-            c = s.slab_done(np.asarray(sampled), kinds, np.asarray(vtok), drafts)
+            sampled = np.asarray(sampled)  # block for an honest step time
+            vtok = np.asarray(vtok)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            if self.trace_counts["step"] == traces_before:
+                # feed SLO chunk sizing a compile-free step-time estimate
+                s.step_ms = (
+                    dt_ms if s.step_ms is None else 0.8 * s.step_ms + 0.2 * dt_ms
+                )
+            c = s._slab_done(sampled, kinds, vtok, drafts)
             self.stats["steps"] += 1
             self.stats["prefill_tokens"] += c["prefill"]
             self.stats["generated_tokens"] += c["generated"]
@@ -346,6 +385,33 @@ class ServingEngine:
             "ttft_s": _percentiles(
                 [r.t_first - r.t_admit for r in fin if r.t_first and r.t_admit]
             ),
+            "tenants": {
+                t: {
+                    "finished": len(rs),
+                    "latency_s": _percentiles(
+                        [r.t_done - r.t_admit for r in rs if r.t_done and r.t_admit]
+                    ),
+                    "ttft_s": _percentiles(
+                        [r.t_first - r.t_admit for r in rs if r.t_first and r.t_admit]
+                    ),
+                }
+                for t, rs in sorted(_by_tenant(fin).items())
+            },
+            "prefix": {
+                "enabled": self.sched.index is not None,
+                "admissions": self.sched.n_admissions,
+                "hits": self.sched.n_prefix_hits,
+                "hit_rate": (
+                    self.sched.n_prefix_hits / self.sched.n_admissions
+                    if self.sched.n_admissions
+                    else None
+                ),
+                "tokens_saved": self.sched.prefix_tokens_saved,
+                "forks": self.sched.n_forks,
+                "fork_copies": self.stats["fork_copies"],
+                "peak_blocks": self.sched.alloc.peak_in_use,
+                "double_frees": self.sched.alloc.double_frees,
+            },
             "spec": {
                 "enabled": spec_on,
                 "spec_len": self.spec_len,

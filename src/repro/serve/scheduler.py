@@ -9,31 +9,48 @@ never retraces on request churn.
 
 Policy (Orca-style iteration-level scheduling, token-level batching):
 
-* **admission** — FCFS by arrival; a waiting request is admitted when a
-  decode slot is free and the pool can cover its prompt.
+* **admission** — priority classes with per-tenant fair shares: among the
+  arrived waiting requests the scheduler repeatedly admits the one with the
+  highest ``priority``, breaking ties toward the tenant holding the fewest
+  slots (work-conserving max-min fairness), then by arrival.  A request is
+  admitted when a decode slot is free and the pool can cover the un-shared
+  part of its prompt.
+* **prefix sharing** — a :class:`~repro.serve.prefix.PrefixIndex` maps the
+  prompt to already-resident block runs: fully-matched blocks are shared by
+  refcount (no pages, no prefill), a mid-block divergence forks the block
+  (copy-on-write: the engine copies the pages before its next step — see
+  ``pending_copies``), and only the divergent tail is prefilled.
 * **slab packing** — every slot contributes rows to one (B, W) token slab
-  per iteration: a mid-prefill slot fills its row with the next <= W prompt
-  tokens, a running slot carries its last sampled token in row 0, and idle
+  per iteration: a mid-prefill slot fills its row with its next prompt
+  chunk, a running slot carries its last sampled token in row 0, and idle
   rows are dead (``kinds`` = live rows per slot; dead rows write to the
-  trash block).  Prefill chunks therefore ride in whatever slots the decode
-  batch isn't using — prefilling a new request never stalls the runners.
+  trash block).  Chunk sizing is SLO-aware: a prefill with a TTFT target
+  always takes the full width, and when one of them is at risk (measured
+  step time says the target needs more than half the slab's rate) the
+  SLO-less prefills throttle to one block per step so every step stays
+  short.
 * **growth/eviction** — decode slots grow their block list lazily, one
-  block at a time; when the pool is exhausted the *youngest* running
-  request is evicted back to the waiting queue (recompute-style preemption,
-  its blocks freed for the older requests).
+  block at a time; when the pool is exhausted a requester may only evict
+  runners strictly weaker than itself (lower priority, then younger), so
+  the most senior request always finishes (no eviction livelock).
+  Releasing a victim only returns blocks with no remaining sharers — a
+  shared prefix survives its evicted co-owner.
 * **completion** — a slot that reaches ``max_new_tokens`` frees its blocks
   and the slot is immediately reusable (padding-free slot reuse: the other
   slots never see it).
 """
+
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from repro.core.plan import ServePlan
+from repro.serve.prefix import PrefixIndex
 
 WAITING, PREFILL, RUNNING, DONE = "waiting", "prefill", "running", "done"
 
@@ -72,12 +89,21 @@ def random_stream(
 
 
 class BlockAllocator:
-    """Free-list allocator over the shared block pool.
+    """Refcounted free-list allocator over the shared block pool.
 
     Block 0 is reserved as the trash block (idle decode slots write there),
-    so ids 1..n_blocks-1 are allocatable.  Freed blocks return to the pool
-    and are handed out again (wraparound) — stale page contents are simply
-    overwritten by the next owner's writes.
+    so ids 1..n_blocks-1 are allocatable.  ``alloc`` hands out blocks with
+    one reference; ``share`` adds a sharer (prefix sharing: N requests on
+    one resident prefix hold the same physical block); ``free`` drops one
+    reference per listed block and only returns a block to the pool when
+    its last sharer lets go.  Freed blocks are handed out again
+    (wraparound) — stale page contents are simply overwritten by the next
+    owner's writes.
+
+    Double-free safety: with refcounts a stray second ``free`` of the same
+    list would silently steal a block still owned by a sharer, so freeing
+    a block with no live references is a counted, warned no-op
+    (``double_frees``) instead of trusting callers.
     """
 
     def __init__(self, n_blocks: int):
@@ -85,10 +111,21 @@ class BlockAllocator:
             raise ValueError("need at least one allocatable block + trash")
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, 0, -1))  # pop() yields 1 first
+        self._ref = [0] * n_blocks
+        self.double_frees = 0
+        self.peak_in_use = 0
 
     @property
     def available(self) -> int:
         return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        """Physical blocks currently owned (however many sharers each has)."""
+        return self.n_blocks - 1 - len(self._free)
+
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
 
     def alloc(self, n: int) -> Optional[list[int]]:
         """n blocks, or None when the pool cannot host them (caller evicts)."""
@@ -96,29 +133,77 @@ class BlockAllocator:
             raise ValueError(n)
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._ref[b] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return got
 
-    def free(self, blocks: list[int]) -> None:
+    def share(self, blocks: list[int]) -> None:
+        """Add one reference per block (must already be live)."""
+        for b in blocks:
+            if self._ref[b] < 1:
+                raise ValueError(f"cannot share unowned block {b}")
+        for b in blocks:
+            self._ref[b] += 1
+
+    def free(self, blocks: list[int]) -> list[int]:
+        """Drop one reference per block; returns the blocks actually
+        released to the pool (refcount hit zero) so the caller can
+        invalidate the prefix index precisely."""
+        released = []
         for b in blocks:
             if not 0 < b < self.n_blocks:
                 raise ValueError(f"block {b} out of range")
-            if b in self._free:
-                raise ValueError(f"double free of block {b}")
-            self._free.append(b)
+            if self._ref[b] < 1:
+                self.double_frees += 1
+                warnings.warn(
+                    f"double free of block {b} ignored", RuntimeWarning,
+                    stacklevel=2,
+                )
+                continue
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+                released.append(b)
+        return released
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request (the ``repro.serve`` public request record).
+
+    Construct with the prompt and generation budget; the multi-tenant
+    descriptors are keyword-only:
+
+    * ``tenant`` — fair-share accounting key (per-tenant slot shares).
+    * ``priority`` — admission/eviction class; higher wins.
+    * ``slo_ttft_ms`` — time-to-first-token target; feeds SLO-aware prefill
+      chunk sizing (and, via the plan, slab width / draft depth).
+    * ``tag`` — free-form workload-class label for per-class reporting
+      (``serve.workload.per_class_report``); never read by the scheduler.
+
+    Every field after the marker comment is scheduler-owned runtime state —
+    internal, reset on eviction, not part of the construction API.
+    """
+
     rid: str
     prompt: list[int]
     max_new_tokens: int
     arrival: int = 0  # engine iteration at which the request becomes visible
+    _: dataclasses.KW_ONLY
+    tenant: str = "default"
+    priority: int = 0
+    slo_ttft_ms: Optional[float] = None
+    tag: str = ""
     # -- scheduler-owned state --
     state: str = WAITING
     slot: int = -1
     blocks: list[int] = dataclasses.field(default_factory=list)
-    pos: int = 0  # prompt tokens prefilled so far
+    pos: int = 0  # prompt tokens resident (shared prefix + prefilled) so far
     out: list[int] = dataclasses.field(default_factory=list)
+    shared: int = 0  # leading blocks held by refcount share (stats only)
+    registered: int = 0  # prefix-index high-water mark (full blocks indexed)
     # -- latency bookkeeping (wall clock; summary percentiles) --
     t_admit: Optional[float] = None  # first admitted into a slot
     t_first: Optional[float] = None  # first output token sampled
@@ -129,12 +214,21 @@ class Request:
         return len(self.out) >= self.max_new_tokens
 
 
+def _seniority(r: Request) -> tuple:
+    """Total order for admission/eviction: higher priority first, then
+    older arrival, then rid.  Smaller = more senior."""
+    return (-r.priority, r.arrival, r.rid)
+
+
 class Scheduler:
     """Owns slots, block tables and the request queues for one engine."""
 
     def __init__(self, serve: ServePlan):
         self.serve = serve
         self.alloc = BlockAllocator(serve.n_blocks)
+        self.index = (
+            PrefixIndex(serve.block_size) if serve.prefix_sharing else None
+        )
         self.table = np.zeros(
             (serve.decode_batch, serve.max_blocks_per_seq), np.int32
         )  # all-trash until a slot is owned
@@ -143,6 +237,18 @@ class Scheduler:
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
         self.n_evictions = 0
+        # copy-on-write forks the engine must apply (device page copies)
+        # BEFORE its next step: (src block, dst block) pairs, appended at
+        # admission and drained by ``drain_copies``.  Nothing may free the
+        # source between admission and the drain (the engine drains right
+        # after ``admit``; growth/eviction only run later in the iteration).
+        self.pending_copies: list[tuple[int, int]] = []
+        self.n_forks = 0
+        self.n_admissions = 0
+        self.n_prefix_hits = 0
+        self.prefix_tokens_saved = 0
+        # measured step wall time (EMA, engine-fed) for SLO chunk sizing
+        self.step_ms: Optional[float] = None
 
     # ------------------------------------------------------------- helpers
     def _blocks_for(self, n_tokens: int) -> int:
@@ -158,38 +264,109 @@ class Scheduler:
         self.waiting.append(req)
 
     # ----------------------------------------------------------- admission
+    def _tenant_load(self) -> dict:
+        load: dict = {}
+        for r in self._active():
+            load[r.tenant] = load.get(r.tenant, 0) + 1
+        return load
+
     def admit(self, iteration: int) -> None:
-        """FCFS: move waiting requests into free slots while blocks last.
+        """Priority + per-tenant fair-share admission over arrived waiters.
 
         Dead slab rows write to the trash block, so a prompt needs exactly
-        ``ceil(len / block_size)`` blocks — no chunk-padding waste."""
-        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
-        for req in list(self.waiting):
-            if req.arrival > iteration:
-                continue
+        ``ceil(len / block_size)`` blocks — minus whatever prefix the index
+        finds resident.  Admission stops at the first pool-full candidate
+        (no bypass: a starved head-of-line request keeps its turn)."""
+        while True:
+            arrived = [r for r in self.waiting if r.arrival <= iteration]
+            if not arrived:
+                return
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
                 return
-            blocks = self.alloc.alloc(self._blocks_for(len(req.prompt)))
-            if blocks is None:
-                return  # pool full: keep FCFS order, try next iteration
-            self.waiting.remove(req)
-            req.state, req.slot, req.blocks, req.pos, req.out = (
-                PREFILL, slot, blocks, 0, [],
+            load = self._tenant_load()
+            req = min(
+                arrived,
+                key=lambda r: (-r.priority, load.get(r.tenant, 0), r.arrival, r.rid),
             )
-            if req.t_admit is None:  # re-admission after eviction keeps t0
-                req.t_admit = time.perf_counter()
-            self.slots[slot] = req
-            self.table[slot] = 0
-            self.table[slot, : len(blocks)] = blocks
-            self.lens[slot] = 0
+            if not self._admit_one(req, slot):
+                return  # pool full: keep order, try next iteration
+
+    def _admit_one(self, req: Request, slot: int) -> bool:
+        """Place one request into a slot, sharing whatever prefix is
+        resident.  Returns False (no side effects) when the pool cannot
+        host the un-shared blocks."""
+        total = self._blocks_for(len(req.prompt))
+        full: list[int] = []
+        partial = None
+        p = 0
+        if self.index is not None:
+            full, partial, p = self.index.match(req.prompt)
+        fresh = self.alloc.alloc(total - len(full))
+        if fresh is None:
+            return False
+        self.alloc.share(full)
+        if partial is not None:
+            # copy-on-write fork: the divergence point sits inside a
+            # resident block — copy its pages to fresh[0], prefill the tail
+            self.pending_copies.append((partial[0], fresh[0]))
+            self.n_forks += 1
+        blocks = full + fresh
+        self.waiting.remove(req)
+        req.state, req.slot, req.blocks, req.pos, req.out = (
+            PREFILL, slot, blocks, p, [],
+        )
+        req.shared = len(full)
+        req.registered = len(full)
+        self.n_admissions += 1
+        if p > 0:
+            self.n_prefix_hits += 1
+            self.prefix_tokens_saved += p
+        if req.t_admit is None:  # re-admission after eviction keeps t0
+            req.t_admit = time.perf_counter()
+        self.slots[slot] = req
+        self.table[slot] = 0
+        self.table[slot, : len(blocks)] = blocks
+        self.lens[slot] = 0
+        return True
+
+    def drain_copies(self) -> list[tuple[int, int]]:
+        """Hand the engine the pending fork copies (and forget them)."""
+        out, self.pending_copies = self.pending_copies, []
+        return out
 
     # ------------------------------------------------------------ the slab
     def busy(self) -> bool:
         return any(s is not None for s in self.slots)
 
-    def slab_view(self, width: int, drafts: Optional[dict] = None):
-        """Pack one engine iteration's (B, W) token slab.
+    def _slo_pressure(self) -> bool:
+        """True while some SLO'd prefill is at risk: at the measured step
+        time its TTFT target needs more than half the slab's row rate, so
+        SLO-less prefills should yield chunk width (shorter steps)."""
+        if self.step_ms is None:
+            return False
+        now = time.perf_counter()
+        W = self.serve.mixed_slab_width
+        for r in self.prefilling():
+            if r.slo_ttft_ms is None or r.t_admit is None:
+                continue
+            left_ms = r.slo_ttft_ms - (now - r.t_admit) * 1e3
+            steps_left = max(left_ms, 0.0) / max(self.step_ms, 1e-9)
+            if len(r.prompt) - r.pos > 0.5 * W * steps_left:
+                return True
+        return False
+
+    def _chunk_for(self, req: Request, width: int, pressure: bool) -> int:
+        """SLO-aware prefill chunk sizing: TTFT-targeted requests always
+        take the full slab width; SLO-less ones throttle to one block per
+        step while an SLO'd prefill is at risk."""
+        rem = len(req.prompt) - req.pos
+        if req.slo_ttft_ms is None and pressure:
+            return min(rem, width, self.serve.block_size)
+        return min(rem, width)
+
+    def _slab_view(self, width: int, drafts: Optional[dict] = None):
+        """[internal] Pack one engine iteration's (B, W) token slab.
 
         Returns (tokens, tables, lens, kinds) as numpy arrays:
         ``kinds[b]`` is the number of live query rows of slot b — 0 for an
@@ -209,6 +386,7 @@ class Scheduler:
         tables = np.zeros_like(self.table)
         lens = np.zeros((B,), np.int32)
         kinds = np.zeros((B,), np.int32)
+        pressure = self._slo_pressure()
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -221,20 +399,21 @@ class Scheduler:
                 lens[b] = self.lens[b]
                 kinds[b] = len(row)
             elif req.state == PREFILL:
-                chunk = req.prompt[req.pos : req.pos + width]
+                n = self._chunk_for(req, width, pressure)
+                chunk = req.prompt[req.pos : req.pos + n]
                 tokens[b, : len(chunk)] = chunk
                 lens[b] = req.pos
                 kinds[b] = len(chunk)
         return tokens, tables, lens, kinds
 
-    def slab_done(
+    def _slab_done(
         self,
         sampled: np.ndarray,
         kinds: np.ndarray,
         vtok: Optional[np.ndarray] = None,
         drafts: Optional[dict] = None,
     ) -> dict:
-        """Consume one unified step's per-slot sampled tokens ((B,) int).
+        """[internal] Consume one unified step's per-slot sampled tokens.
 
         ``sampled[b]`` is the greedy token at the slot's last live row — a
         running slot's next token, or (on the final prompt chunk) the
@@ -250,6 +429,10 @@ class Scheduler:
         the block table is untouched and the stale KV the dead rows wrote
         past the new length is masked by the kernel and overwritten when
         the slot next advances.
+
+        Newly *full* blocks (their whole extent below the slot's accepted
+        length) are registered in the prefix index here — only accepted
+        tokens, so rejected draft rows never leak into a shared prefix.
 
         Returns this step's accounting: output tokens actually emitted
         (``generated``), prompt rows consumed (``prefill``), and the
@@ -291,6 +474,8 @@ class Scheduler:
                 c["generated"] += len(emit)
                 if req.done:
                     finish(b, req)
+                else:
+                    self._register_full_blocks(req, int(self.lens[b]))
             elif req.state == PREFILL:
                 req.pos += int(kinds[b])
                 c["prefill"] += int(kinds[b])
@@ -302,7 +487,30 @@ class Scheduler:
                     self.lens[b] = len(req.prompt)
                     if req.done:  # max_new_tokens == 1
                         finish(b, req)
+                        continue
+                self._register_full_blocks(req, req.pos)
         return c
+
+    # Back-compat aliases: PR 6 consolidated the public serving surface on
+    # ``ServingEngine.submit/run/summary`` — slab packing and growth are
+    # engine internals, kept reachable under their old names.
+    slab_view = _slab_view
+    slab_done = _slab_done
+
+    def _register_full_blocks(self, req: Request, n_written: int) -> None:
+        """Index every newly *full* block of a live request.
+
+        KV below ``n_written`` (accepted tokens only) is final: per-slot
+        lengths are monotone, so a full block's pages never change again
+        and its token run identifies them exactly."""
+        if self.index is None:
+            return
+        n_full = n_written // self.serve.block_size
+        if n_full <= req.registered:
+            return
+        toks = (req.prompt + req.out)[: n_full * self.serve.block_size]
+        self.index.register(toks, req.blocks[:n_full])
+        req.registered = n_full
 
     # -------------------------------------------------------------- decode
     def running(self) -> list[Request]:
@@ -318,19 +526,22 @@ class Scheduler:
             s for s in self.slots if s is not None and s.state in (PREFILL, RUNNING)
         ]
 
-    def grow_for_decode(self, extra_rows: Optional[dict] = None) -> None:
-        """Ensure every running slot has a block for the position it is
-        about to write; when the pool runs dry a requester may only evict
-        runners strictly *younger* than itself — if there is none it
-        preempts itself instead.  The oldest request therefore always keeps
-        its pages and finishes (no eviction livelock).
+    def _grow_for_decode(self, extra_rows: Optional[dict] = None) -> None:
+        """[internal] Ensure every running slot has a block for the position
+        it is about to write; when the pool runs dry a requester may only
+        evict holders strictly *weaker* than itself (lower priority, then
+        younger) — if there is none it preempts itself instead.  The most
+        senior request therefore always keeps its pages and finishes (no
+        eviction livelock).  Evicting a sharer releases only its exclusive
+        blocks — a shared prefix stays resident for its co-owners, so a
+        victim may free less than it holds.
 
         ``extra_rows`` ({rid: n}) covers speculative slots: a slot about to
         verify n draft rows writes KV at n positions past its real token,
         so its block run must reach that high-water mark *before* the step
         (rejected rows roll back the length only — the blocks stay)."""
         extra_rows = extra_rows or {}
-        for req in sorted(self.running(), key=lambda r: (r.arrival, r.rid)):
+        for req in sorted(self.running(), key=_seniority):
             if req.state != RUNNING:  # evicted as a victim earlier in this loop
                 continue
             rows = 1 + int(extra_rows.get(req.rid, 0))
@@ -343,13 +554,11 @@ class Scheduler:
                     self.table[req.slot, start : len(req.blocks)] = got
                     need = 0
                     break
-                victims = sorted(
-                    self._active(), key=lambda r: (r.arrival, r.rid), reverse=True
-                )
+                victims = sorted(self._active(), key=_seniority, reverse=True)
                 victim = next(
                     (
                         v for v in victims
-                        if v is not req and (v.arrival, v.rid) > (req.arrival, req.rid)
+                        if v is not req and _seniority(v) > _seniority(req)
                     ),
                     None,
                 )
@@ -363,16 +572,26 @@ class Scheduler:
                     break
                 self.evict(victim)
 
+    grow_for_decode = _grow_for_decode  # back-compat alias (internal)
+
     def evict(self, req: Request) -> None:
-        """Recompute-style preemption: back to the waiting queue from scratch."""
+        """Recompute-style preemption: back to the waiting queue from scratch.
+
+        Blocks the victim shares with live co-owners are only dereferenced
+        (eviction refuses to release pages somebody else still reads); on
+        re-admission the prefix index may hand them straight back."""
         self._release(req)
         req.state, req.pos, req.out = WAITING, 0, []
         self.waiting.append(req)
         self.n_evictions += 1
 
     def _release(self, req: Request) -> None:
-        self.alloc.free(req.blocks)
+        for b in self.alloc.free(req.blocks):
+            if self.index is not None:
+                self.index.forget(b)
         req.blocks = []
+        req.shared = 0
+        req.registered = 0
         if req.slot >= 0:
             self.table[req.slot] = 0
             self.lens[req.slot] = 0

@@ -51,8 +51,25 @@ def test_allocator_rejects_bad_frees():
     with pytest.raises(ValueError):
         a.free([9])
     a.free(blocks)
+    # double free: counted, warned no-op — with refcounts a trusted second
+    # free would silently steal a sharer's block, so the allocator defends
+    with pytest.warns(RuntimeWarning):
+        assert a.free([blocks[0]]) == []
+    assert a.double_frees == 1
+    assert a.available == 3  # pool unchanged by the bad free
+
+
+def test_allocator_refcounts_share_and_release():
+    a = BlockAllocator(6)
+    got = a.alloc(2)
+    a.share(got)  # second owner
+    assert a.free(got) == []  # first free: still shared, nothing released
+    assert a.available == 3
+    assert sorted(a.free(got)) == sorted(got)  # last owner releases
+    assert a.available == 5
+    assert a.peak_in_use == 2
     with pytest.raises(ValueError):
-        a.free([blocks[0]])  # double free
+        a.share(got)  # unowned blocks cannot gain sharers
 
 
 # ------------------------------------------------------------------- pools

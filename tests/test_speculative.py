@@ -12,15 +12,8 @@ import pytest
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
-from repro.serve import (
-    ModelDraft,
-    NGramDraft,
-    Request,
-    ServingEngine,
-    greedy_generate,
-    make_draft_source,
-    prompt_lookup,
-)
+from repro.serve import Request, ServingEngine, greedy_generate, make_draft_source
+from repro.serve.speculative import ModelDraft, NGramDraft, prompt_lookup
 
 MESH1 = {"data": 1, "model": 1}
 
