@@ -13,8 +13,9 @@ Two entry points:
        pages);
     2. the shared system prompts actually hit the radix index
        (``prefix.hit_rate > 0``);
-    3. the unified step still compiles exactly once
-       (``trace_counts == {"step": 1}`` — fork copies ride a separate jit).
+    3. the serving programs still compile at most once each
+       (``trace_counts`` bounded by ``{"step": 1, "rolled_step": 1}`` —
+       fork copies ride a separate jit).
 
   It also runs the N-requests-one-prompt microbench: N staggered requests on
   a single prompt should prefill the prompt ~once, not ~N times, and consume
@@ -76,9 +77,10 @@ def _replay(cfg, reqs, *, prefix_sharing):
     wall = time.perf_counter() - t0
     s = engine.summary()
     s["wall_s"] = wall
-    assert engine.trace_counts == {"step": 1}, (
-        f"trace replay retraced the unified step: {engine.trace_counts}"
-    )
+    tr = engine.trace_counts
+    assert set(tr) <= {"step", "rolled_step"} and tr["step"] == 1 and (
+        tr.get("rolled_step", 0) <= 1
+    ), f"trace replay retraced a serving step: {tr}"
     return out, s, engine
 
 

@@ -7,12 +7,23 @@ Two entry points:
   ``BENCH_serve.json`` (tokens/s, steps, mean batch occupancy, serve plan).
   CI runs this on smollm-135m and uploads the artifact next to
   BENCH_smoke/BENCH_dist, so serving throughput is measurable across PRs.
+* ``rolled_sweep(arch, out)`` — decode tok/s vs the rolled-loop cap K at
+  decode batch in {1, 4, 16} on a decode-heavy stream, written to
+  ``BENCH_rolled.json``.  K=1 is the per-dispatch baseline; larger K
+  amortizes the host dispatch overhead across K on-device decode
+  iterations, which matters most at batch=1 where one dispatch moves one
+  token.  The record keeps every point (including regressions — on a CPU
+  backend XLA's while_loop overhead can eat the dispatch saving; the json
+  is the honest measurement either way).
 * ``run()`` — the benchmarks/run.py hook: sweep the decode-slot count on the
-  reduced config and emit ``serve_sweep/batchN`` CSV rows; occupancy in the
-  derived column shows where slot count stops buying throughput.
+  reduced config and emit ``serve_sweep/batchN`` CSV rows (occupancy in the
+  derived column shows where slot count stops buying throughput), then
+  ``serve_rolled/b1kK`` rows for the rolled-loop A/B at batch=1.
 
     PYTHONPATH=src:. python -m benchmarks.serve_sweep --smoke \
         --arch smollm-135m --out BENCH_serve.json
+    PYTHONPATH=src:. python -m benchmarks.serve_sweep --rolled \
+        --arch smollm-135m --out BENCH_rolled.json
 """
 from __future__ import annotations
 
@@ -120,6 +131,81 @@ def _spec_smoke(cfg) -> dict:
     }
 
 
+def _drive_rolled(cfg, decode_batch, rolled, *, prompt_len=8, gen=24, seed=0):
+    """Decode-heavy measurement for the rolled A/B: every request arrives at
+    t=0 with a short prompt and a long generation, so the stream is almost
+    entirely decode iterations — the regime the rolled loop targets."""
+    mesh = {"data": 1, "model": 1}
+    plan = derive_plan(
+        cfg, mesh, TPU_V5E, batch=decode_batch, seq_len=prompt_len,
+        training=False,
+    )
+    serve = derive_serve_plan(
+        cfg, mesh, TPU_V5E,
+        max_seq_len=max(64, prompt_len + gen),
+        decode_batch=decode_batch,
+        prefill_chunk=prompt_len,
+        mixed_slab_width=min(prompt_len, 8),
+        rolled_steps=rolled,
+    )
+    params = init_params(jax.random.PRNGKey(seed), cfg, plan, dtype=jnp.float32)
+    engine = ServingEngine(params, cfg, plan, serve)
+    # warm BOTH programs (gen > 2*rolled guarantees a rolled span compiles
+    # when rolling is on) so the measured stream times serving, not XLA
+    engine.run(random_stream(cfg, 1, prompt_len, max(4, 2 * rolled), seed=99,
+                             rid_prefix="warm"))
+    engine.reset_stats()
+    t0 = time.perf_counter()
+    engine.run(random_stream(cfg, decode_batch, prompt_len, gen, 0, seed=7))
+    wall = time.perf_counter() - t0
+    s = engine.summary()
+    tr = engine.trace_counts
+    assert set(tr) <= {"step", "rolled_step"} and tr["step"] == 1 and (
+        tr.get("rolled_step", 0) <= 1
+    ), f"rolled sweep retraced a serving step: {tr}"
+    return {
+        "batch": decode_batch,
+        "rolled_cap": rolled,
+        "tok_per_s": s["generated_tokens"] / wall,
+        "generated_tokens": s["generated_tokens"],
+        "wall_s": wall,
+        "steps": s["steps"],
+        "rolled": s["rolled"],
+        "traces": dict(tr),
+    }
+
+
+def rolled_sweep(arch: str = "smollm-135m",
+                 out: str = "BENCH_rolled.json") -> dict:
+    """Decode tok/s vs rolled-loop cap K at batch in {1, 4, 16} (the ISSUE's
+    acceptance sweep).  ``monotone_batch1`` records whether batch=1
+    throughput improves monotonically-or-flat with K (5% measurement
+    slack); a CPU backend may legitimately report False — the json carries
+    the honest curve either way."""
+    cfg = get_config(arch).reduced()
+    points = []
+    for b in (1, 4, 16):
+        for k in (1, 2, 4, 8):
+            points.append(_drive_rolled(cfg, b, k))
+            p = points[-1]
+            print(f"rolled b={b} K={k}: {p['tok_per_s']:.1f} tok/s "
+                  f"spans={p['rolled']['dispatches']} "
+                  f"mean_span={p['rolled']['mean_span']}")
+    b1 = [p["tok_per_s"] for p in points if p["batch"] == 1]
+    record = {
+        "arch": cfg.name,
+        "points": points,
+        "monotone_batch1": all(
+            later >= 0.95 * prev for prev, later in zip(b1, b1[1:])
+        ),
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {out}: batch=1 curve {[round(x, 1) for x in b1]} "
+          f"monotone={record['monotone_batch1']}")
+    return record
+
+
 def run() -> list[str]:
     """Batch-occupancy sweep on the reduced config (benchmarks/run.py hook)."""
     cfg = get_config("smollm-135m").reduced()
@@ -135,16 +221,32 @@ def run() -> list[str]:
                 f"kv={s['serve_plan']['kv_dtype']}",
             )
         )
+    # rolled-loop A/B at the dispatch-bound operating point (batch=1)
+    for k in (1, 4):
+        p = _drive_rolled(cfg, 1, k, gen=16)
+        out.append(
+            emit(
+                f"serve_rolled/b1k{k}",
+                p["wall_s"] * 1e6,
+                f"tok_s={p['tok_per_s']:.1f};"
+                f"spans={p['rolled']['dispatches']}",
+            )
+        )
     return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--rolled", action="store_true",
+                    help="decode tok/s vs rolled cap K -> BENCH_rolled.json")
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--out", default="BENCH_serve.json")
     a = ap.parse_args()
     if a.smoke:
         serving_smoke(a.arch, a.out)
+    elif a.rolled:
+        rolled_sweep(a.arch, a.out if a.out != "BENCH_serve.json"
+                     else "BENCH_rolled.json")
     else:
         run()

@@ -29,6 +29,12 @@ class HardwareSpec:
     ici_links_per_chip: int  # links per chip on a torus axis pair
     # MXU native tile edge (paper: AIE vector instruction length, power of 2).
     mxu_dim: int = 128
+    # Host dispatch overhead per device program launch (runtime call +
+    # host-side scheduling between steps).  The paper's AIE pipeline streams
+    # many iterations per host intervention precisely because this cost is
+    # fixed per dispatch; the serving planner uses it to size the rolled
+    # on-device decode loop (``ServePlan.rolled_steps``).
+    dispatch_overhead_s: float = 100e-6
 
     @property
     def machine_balance_bf16(self) -> float:

@@ -431,6 +431,18 @@ class ServePlan:
     # roofline charges the fallback its gather bytes, so this knob feeds the
     # decode-batch derivation too.
     fused_attention: bool = True
+    # Rolled on-device decode loop: max decode iterations per host dispatch
+    # (K).  One host round-trip costs ``hw.dispatch_overhead_s`` regardless
+    # of how much work it launches — the CAT/EA4RCA communication-avoiding
+    # argument — so at small decode batch (steps are short, overhead is a
+    # large fraction) the engine rolls K sampling+repack+length-advance
+    # iterations into ONE ``lax.while_loop`` dispatch.  Derived so the
+    # dispatch overhead amortizes below ~10% of the rolled span; 1 disables
+    # rolling (every step is a host round-trip, the pre-rolled contract).
+    # The scheduler still chooses the *actual* K per dispatch from the
+    # event horizon (next admission/prefill/speculation/growth boundary),
+    # bounded above by this plan cap.
+    rolled_steps: int = 1
     # Speculative decoding: draft depth per decode slot (gamma).  A
     # speculating slot submits spec_len drafted tokens + its real one as
     # gamma+1 slab rows — mechanically a prefill chunk — and the host keeps
@@ -473,7 +485,8 @@ class ServePlan:
             f"block_size={self.block_size} n_blocks={self.n_blocks} "
             f"kv_dtype={self.kv_dtype} prefill_chunk={self.prefill_chunk} "
             f"slab={self.mixed_slab_width} pages/tile={self.pages_per_tile} "
-            f"fused={self.fused_attention} spec_len={self.spec_len} "
+            f"fused={self.fused_attention} rolled_steps={self.rolled_steps} "
+            f"spec_len={self.spec_len} "
             f"draft={self.draft} prefix_sharing={self.prefix_sharing} "
             f"slo_ttft_ms={self.slo_ttft_ms} max_seq={self.max_seq_len} "
             f"kv_bytes/token={self.kv_bytes_per_token}"
@@ -491,6 +504,7 @@ class ServePlan:
             "mixed_slab_width": self.mixed_slab_width,
             "pages_per_tile": self.pages_per_tile,
             "fused_attention": self.fused_attention,
+            "rolled_steps": self.rolled_steps,
             "spec_len": self.spec_len,
             "draft": self.draft,
             "prefix_sharing": self.prefix_sharing,
@@ -547,6 +561,7 @@ def derive_serve_plan(
     mixed_slab_width: Optional[int] = None,
     pages_per_tile: Optional[int] = None,
     fused_attention: bool = True,
+    rolled_steps: Optional[int] = None,
     spec_len: Optional[int] = None,
     draft: str = "none",
     slack_blocks: int = 0,
@@ -582,6 +597,16 @@ def derive_serve_plan(
       tiles in VMEM; the tile height is the largest block-table divisor
       whose tiles fit an eighth of the chip's VMEM (the rest holds q, the
       accumulator and the output block).
+    * **rolled decode steps (K cap)** — how many decode iterations one host
+      dispatch should carry.  A dispatch costs ``hw.dispatch_overhead_s``
+      no matter how much it launches, while one decode step is
+      weight-stream-bound (~ weight_bytes / hbm_bandwidth); the overhead
+      fraction is therefore ``overhead / (K x step)``.  K is the smallest
+      power of two holding that fraction under ~10% (1 when a single step
+      already amortizes it — big models — and capped at 32: past that the
+      host loses admission/completion responsiveness for < 0.4% more).  A
+      TTFT target additionally caps K so a rolled span cannot blockade an
+      arriving prompt past ~a quarter of its budget.
     * **speculative draft depth (gamma)** — the joint-constraint answer to
       "how many draft rows per slot can verification absorb for free":
       decode at batch B is bandwidth-bound (B below the machine balance
@@ -669,6 +694,28 @@ def derive_serve_plan(
         )
         tile_cap = max(1, (hw.vmem_bytes // 8) // max(2 * page_bytes, 1))
         pages_per_tile = largest_divisor_of(max_blocks_per_seq, tile_cap)
+    if rolled_steps is None:
+        # Dispatch-overhead slack: one decode step streams the weights once
+        # (est_step_s); the host round-trip costs dispatch_overhead_s on
+        # top.  Roll K steps per dispatch until the overhead fraction
+        # overhead / (K * step) drops under ~10%.
+        est_step_s = weight_bytes / max(hw.hbm_bandwidth, 1.0)
+        rolled_steps = 1
+        while (
+            hw.dispatch_overhead_s > 0.1 * rolled_steps * max(est_step_s, 1e-12)
+            and rolled_steps < 32
+        ):
+            rolled_steps *= 2
+        if slo_ttft_ms is not None:
+            # an arriving prompt waits out the in-flight rolled span before
+            # its first prefill chunk: keep that wait under ~1/4 of the
+            # TTFT budget so rolling never blows the very target the plan
+            # was shaped for
+            step_budget = max(
+                1, int((slo_ttft_ms / 4e3) / max(est_step_s, 1e-12))
+            )
+            rolled_steps = min(rolled_steps, _pow2_floor(step_budget))
+    rolled_steps = max(1, int(rolled_steps))
     if spec_len is None:
         if draft == "none":
             spec_len = 0
@@ -701,6 +748,7 @@ def derive_serve_plan(
         mixed_slab_width=int(mixed_slab_width),
         pages_per_tile=int(pages_per_tile),
         fused_attention=bool(fused_attention),
+        rolled_steps=int(rolled_steps),
         spec_len=int(spec_len),
         draft=str(draft),
         prefix_sharing=bool(prefix_sharing),

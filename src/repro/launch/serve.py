@@ -88,6 +88,7 @@ class ServeArgs:
     spec_len: Optional[int] = None
     no_prefix_sharing: bool = False
     slo_ttft_ms: Optional[float] = None
+    rolled_steps: Optional[int] = None
     # ---- multi-tenant trace replay ----
     trace: Optional[str] = None  # workload mix, e.g. "chat:4,classify:2"
     tenant_mix: int = 2  # tenants sharing per-tenant system prompts
@@ -111,6 +112,7 @@ class ServeArgs:
             "spec_len": self.spec_len,
             "prefix_sharing": not self.no_prefix_sharing,
             "slo_ttft_ms": self.slo_ttft_ms,
+            "rolled_steps": self.rolled_steps,
             "typical_prompt_len": self.prompt_len,
         }
 
@@ -228,6 +230,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slo-ttft-ms", type=float, default=None,
                     help="fleet TTFT target fed back into the plan "
                          "(slab width, draft depth)")
+    ap.add_argument("--rolled-steps", type=int, default=None,
+                    help="cap K of the rolled on-device decode loop (decode "
+                         "iterations per dispatch; default: derived from the "
+                         "dispatch-overhead roofline; 1 disables)")
     ap.add_argument("--trace", default=None,
                     help="multi-tenant trace replay: workload mix spec like "
                          "'chat:4,summarize:2,classify:2' (replaces "

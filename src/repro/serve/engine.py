@@ -7,8 +7,10 @@ Two layers:
   dry-run lowers these for the decode_32k / long_500k / prefill_32k cells
   and non-attention archs (RWKV/RG-LRU/enc-dec) serve through it.
 * ``ServingEngine`` — continuous batching over the paged KV cache
-  (``models/cache.init_paged_cache``) with exactly ONE static-shape jitted
-  device program: the unified mixed prefill/decode step.  Every slot owns
+  (``models/cache.init_paged_cache``) with at most TWO static-shape jitted
+  device programs: the unified mixed prefill/decode step, plus (when the
+  plan's ``rolled_steps`` > 1) the rolled decode loop that runs K decode
+  iterations per dispatch.  Every slot owns
   ``mixed_slab_width`` query rows of a shared (B, W) token slab — a decode
   slot uses 1, a prefill slot up to W (its next prompt chunk), idle rows
   are dead and write to the trash block — so prefilling new requests rides
@@ -151,6 +153,88 @@ def make_mixed_step(
     return jax.jit(step_fn, donate_argnums=(1,))
 
 
+def make_rolled_step(
+    cfg: ArchConfig,
+    plan: ExecutionPlan,
+    serve: ServePlan,
+    *,
+    fused: bool,
+    shard: Callable = Identity,
+    trace: Optional[dict] = None,
+    trace_key: str = "rolled_step",
+):
+    """Build the rolled on-device decode loop: K decode iterations, ONE
+    dispatch (the rolled-compilation idiom — ``lax.while_loop`` keeps the
+    loop body compiled once, not unrolled).
+
+    ``rolled(params, pools, tok (B,), tables (B, MB), lens (B,),
+    steps_left (B,), k_steps ())`` runs up to ``k_steps`` decode iterations
+    entirely on device: each iteration forwards every slot's current token
+    as a width-1 slab, samples the greedy next token, repacks it as the
+    next iteration's input, writes its KV at the slot's position and
+    advances the per-slot length.  The host only sees the finished span.
+
+    ``steps_left[b]`` is slot b's own iteration budget (0 = idle slot):
+    a slot whose budget runs out mid-span goes *dead* — its row writes to
+    the trash block, its sampled token freezes — while the others keep
+    decoding, and the loop's ``cond`` exits early once every slot is done
+    (the on-device analogue of per-slot EOS/max-len exit; the scheduler's
+    event horizon guarantees nothing *else* needs the host mid-span).
+
+    Returns ``(out (B, K), lens (B,), pools)``; ``out[b, :steps_left[b]]``
+    are slot b's tokens in order (later columns hold -1).  ``k_steps`` and
+    ``steps_left`` are data, not shapes — one compile serves every horizon
+    the scheduler picks, so ``trace_counts["rolled_step"]`` stays at 1.
+    The static ``K = serve.rolled_steps`` only sizes the output buffer.
+    """
+    page_state = {
+        "block_size": serve.block_size,
+        "fused": bool(fused),
+        "pages_per_tile": serve.pages_per_tile,
+    }
+    K = int(serve.rolled_steps)
+
+    def rolled_fn(params, pools, tok, tables, lens, steps_left, k_steps):
+        if trace is not None:
+            trace[trace_key] += 1
+        B = tok.shape[0]
+
+        def cond(state):
+            i = state[0]
+            return jnp.logical_and(i < k_steps, jnp.any(steps_left > i))
+
+        def body(state):
+            i, tok, lens, layers, out = state
+            live = steps_left > i
+            kinds = live.astype(jnp.int32)
+            x, nc, _ = forward(
+                params, {"tokens": tok[:, None]}, cfg=cfg, plan=plan,
+                cache={"layers": layers, "t": lens}, shard=shard,
+                page_state={**page_state, "table": tables, "q_lens": kinds},
+            )
+            nxt = jnp.argmax(logits_fn(params, x, cfg)[:, -1], axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            return (
+                i + 1,
+                jnp.where(live, nxt, tok),
+                lens + kinds,
+                nc["layers"],
+                out.at[:, i].set(jnp.where(live, nxt, -1)),
+            )
+
+        _, _, lens, layers, out = jax.lax.while_loop(
+            cond,
+            body,
+            (
+                jnp.int32(0), tok, lens, pools["layers"],
+                jnp.full((B, K), -1, jnp.int32),
+            ),
+        )
+        return out, lens, {"layers": layers}
+
+    return jax.jit(rolled_fn, donate_argnums=(1,))
+
+
 def _by_tenant(finished: list) -> dict:
     groups: dict = {}
     for r in finished:
@@ -159,10 +243,17 @@ def _by_tenant(finished: list) -> dict:
 
 
 def _percentiles(xs: list) -> Optional[dict]:
+    """Latency summary of a sample list; None when there are no samples.
+
+    Always carries ``n``: with one sample every percentile is that sample
+    (numpy's interpolation degenerates), which is statistically meaningless
+    without the count — callers (and humans reading BENCH json) need it to
+    judge whether p99 is a tail or an artifact."""
     if not xs:
         return None
     arr = np.asarray(xs, np.float64)
     return {
+        "n": int(arr.size),
         "mean": float(arr.mean()),
         "p50": float(np.percentile(arr, 50)),
         "p90": float(np.percentile(arr, 90)),
@@ -185,9 +276,19 @@ class ServingEngine:
 
     The scheduler packs the slab per iteration: admit, grow, one mixed
     step.  ``trace_counts`` proves there is no per-request retracing — it
-    stays at {"step": 1} however the stream churns, including with
-    speculative decoding on (draft depth varies per slot per iteration, but
-    only the *values* of ``kinds`` change, never a shape).
+    stays bounded by {"step": 1, "rolled_step": 1} however the stream
+    churns (the second program is the rolled decode loop, compiled at most
+    once; absent when rolling is off), including with speculative decoding
+    on (draft depth varies per slot per iteration, but only the *values*
+    of ``kinds`` change, never a shape).
+
+    When ``serve.rolled_steps > 1`` (and speculation is off) the engine
+    also builds the rolled on-device decode loop: whenever the scheduler's
+    event horizon says no host event falls due for K >= 2 iterations, one
+    ``step()`` call dispatches K decode iterations as one device program
+    (``make_rolled_step``) and advances the iteration clock by the span.
+    Greedy outputs are byte-identical to the K=1 path by construction —
+    the loop body is the same forward/argmax on the same paged state.
 
     ``draft`` (a ``serve/speculative`` DraftSource) + ``serve.spec_len`` > 0
     turn decode slots speculative: each running slot's drafted continuation
@@ -241,6 +342,7 @@ class ServingEngine:
             "steps": 0, "prefill_tokens": 0, "generated_tokens": 0,
             "draft_rows": 0, "accepted_drafts": 0, "spec_slots": 0,
             "spec_generated": 0, "fork_copies": 0, "occupancy_sum": 0.0,
+            "rolled_dispatches": 0, "rolled_steps": 0, "device_s": 0.0,
         }
         # copy-on-write fork: one jitted block copy, reused for every fork
         # (block ids are data, not shapes — compiles once, retraces never;
@@ -255,6 +357,19 @@ class ServingEngine:
             spec_width=self.spec_len + 1 if self.spec_len > 0 else 1,
             trace=self.trace_counts,
         )
+        # rolled on-device decode loop: K iterations per dispatch, used
+        # whenever the scheduler's event horizon allows K >= 2.  Gated off
+        # under speculation — draft accept/rollback is a host event every
+        # iteration, so the horizon would always be 1 anyway.
+        self.rolled_cap = int(serve.rolled_steps) if self.spec_len == 0 else 1
+        if self.rolled_cap > 1:
+            self.trace_counts["rolled_step"] = 0
+            self._rolled = make_rolled_step(
+                cfg, plan, serve, fused=self.fused, shard=shard,
+                trace=self.trace_counts,
+            )
+        else:
+            self._rolled = None
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -301,6 +416,13 @@ class ServingEngine:
         """One engine iteration: admit -> fork copies -> draft -> grow ->
         one unified mixed step -> accept/rollback.
 
+        When the rolled loop is enabled and the scheduler's event horizon
+        allows K >= 2 decode iterations before the next host-required
+        event, one call dispatches the rolled step instead — K iterations,
+        one device program — and the iteration clock advances by the span.
+        Fallback to the ordinary K=1 slab is transparent (same tokens, the
+        differential harness asserts byte identity).
+
         Fork copies are applied immediately after admission, before anything
         can release blocks (growth/eviction run later in the iteration), so
         a copy's source block is still resident when the device reads it."""
@@ -311,6 +433,11 @@ class ServingEngine:
                 self.pools, jnp.int32(src), jnp.int32(dst)
             )
             self.stats["fork_copies"] += 1
+        if self._rolled is not None:
+            k, steps = s.plan_rolled(self.iteration, self.rolled_cap)
+            if k > 1:
+                self._rolled_dispatch(k, steps)
+                return
         drafts = self._propose_drafts()
         s._grow_for_decode({rid: len(d) for rid, d in drafts.items()})
         if s.busy():
@@ -325,6 +452,7 @@ class ServingEngine:
             sampled = np.asarray(sampled)  # block for an honest step time
             vtok = np.asarray(vtok)
             dt_ms = (time.perf_counter() - t0) * 1e3
+            self.stats["device_s"] += dt_ms / 1e3
             if self.trace_counts["step"] == traces_before:
                 # feed SLO chunk sizing a compile-free step-time estimate
                 s.step_ms = (
@@ -343,6 +471,42 @@ class ServingEngine:
             )
         self.iteration += 1
 
+    def _rolled_dispatch(self, k: int, steps: np.ndarray) -> None:
+        """Run one rolled span: up to ``k`` decode iterations in ONE device
+        dispatch (per-slot budgets ``steps``, blocks already pre-reserved by
+        ``plan_rolled``).  Host bookkeeping happens once for the whole span;
+        the iteration clock and the per-step stats advance by the span
+        length so rolled and K=1 runs stay comparable."""
+        s = self.sched
+        tok0 = np.zeros((self.serve.decode_batch,), np.int32)
+        for b, req in enumerate(s.slots):
+            if req is not None and steps[b] > 0:
+                tok0[b] = req.out[-1]
+        traces_before = self.trace_counts["rolled_step"]
+        t0 = time.perf_counter()
+        out, _, self.pools = self._rolled(
+            self.params, self.pools, jnp.asarray(tok0),
+            jnp.asarray(s.table), jnp.asarray(s.lens),
+            jnp.asarray(steps, np.int32), jnp.int32(k),
+        )
+        out = np.asarray(out)  # block for an honest span time
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["device_s"] += dt_ms / 1e3
+        adv = int(steps.max())  # device iterations actually executed
+        if self.trace_counts["rolled_step"] == traces_before and adv > 0:
+            # per-iteration estimate feeds the same SLO chunk-sizing EMA
+            per = dt_ms / adv
+            s.step_ms = per if s.step_ms is None else 0.8 * s.step_ms + 0.2 * per
+        c = s._rolled_done(out, steps)
+        self.stats["steps"] += adv
+        self.stats["rolled_dispatches"] += 1
+        self.stats["rolled_steps"] += adv
+        self.stats["generated_tokens"] += c["generated"]
+        # same unit as the K=1 path: live-slot fraction summed per device
+        # iteration (slot b is live for its first steps[b] iterations)
+        self.stats["occupancy_sum"] += float(steps.sum()) / self.serve.decode_batch
+        self.iteration += adv
+
     def run(self, requests=(), max_iterations: int = 100_000) -> dict:
         """Drive the stream to completion; returns {rid: generated tokens}."""
         for r in requests:
@@ -360,10 +524,17 @@ class ServingEngine:
         only — not slab rows: prompt rows are reported separately as
         ``prefill_tokens`` and rejected draft rows are never counted, so
         throughput cannot be inflated by prefill traffic or by speculation
-        that verifies nothing."""
+        that verifies nothing.
+
+        Safe at any sample count: a cold engine (0 steps, 0 finished)
+        reports None for every rate/percentile instead of dividing by zero,
+        a step-driven engine (no ``run()``, so no ``wall_s``) falls back to
+        accumulated device time for ``tok_per_s``, and percentile dicts
+        carry ``n`` so a 1-sample p99 is recognizable as such."""
         d = max(self.stats["steps"], 1)
         fin = self.sched.finished
         spec_on = self.draft is not None and self.spec_len > 0
+        wall = self.stats.get("wall_s") or self.stats["device_s"] or None
         return {
             "iterations": self.iteration,
             "steps": self.stats["steps"],
@@ -374,11 +545,22 @@ class ServingEngine:
             "traces": dict(self.trace_counts),
             "fused_attention": self.fused,
             "wall_s": self.stats.get("wall_s"),
+            "device_s": self.stats["device_s"],
+            "step_ms": self.sched.step_ms,
             "tok_per_s": (
-                self.stats["generated_tokens"] / self.stats["wall_s"]
-                if self.stats.get("wall_s")
-                else None
+                self.stats["generated_tokens"] / wall if wall else None
             ),
+            "rolled": {
+                "enabled": self._rolled is not None,
+                "cap": self.rolled_cap,
+                "dispatches": self.stats["rolled_dispatches"],
+                "rolled_steps": self.stats["rolled_steps"],
+                "mean_span": (
+                    self.stats["rolled_steps"] / self.stats["rolled_dispatches"]
+                    if self.stats["rolled_dispatches"]
+                    else None
+                ),
+            },
             "latency_s": _percentiles(
                 [r.t_done - r.t_admit for r in fin if r.t_done and r.t_admit]
             ),

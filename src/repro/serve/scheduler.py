@@ -445,10 +445,7 @@ class Scheduler:
         }
 
         def finish(b, req):
-            req.t_done = now
-            req.state = DONE
-            self._release(req)
-            self.finished.append(req)
+            self._finish(req, now)
 
         for b, req in enumerate(self.slots):
             if req is None or kinds[b] == 0:
@@ -491,11 +488,114 @@ class Scheduler:
                 self._register_full_blocks(req, req.pos)
         return c
 
+    def _finish(self, req: Request, now: float) -> None:
+        """Retire a completed request: release its blocks/slot, record it.
+        Shared by the K=1 slab path and the rolled-span path."""
+        req.t_done = now
+        req.state = DONE
+        self._release(req)
+        self.finished.append(req)
+
     # Back-compat aliases: PR 6 consolidated the public serving surface on
     # ``ServingEngine.submit/run/summary`` — slab packing and growth are
     # engine internals, kept reachable under their old names.
     slab_view = _slab_view
     slab_done = _slab_done
+
+    # ------------------------------------------------------- rolled horizon
+    def plan_rolled(self, iteration: int, cap: int):
+        """Event horizon + block pre-reservation for one rolled dispatch.
+
+        Returns ``(k, steps)``: the decode-iteration count the device may
+        run before the host must intervene again, and the per-slot
+        iteration budgets (B,) int32 — or ``(1, None)`` when the next
+        host-required event is immediate, so the engine falls back to the
+        ordinary K=1 mixed step transparently.
+
+        What forces K=1 (each is host work the loop cannot do):
+
+        * a mid-prefill slot — chunk packing / SLO throttling is host-side;
+        * no runners — nothing to decode;
+        * an arrival due next iteration, or pool pressure the reservation
+          below cannot cover without evicting (the K=1 path owns eviction).
+
+        The horizon itself is the distance to the next host event:
+
+        * an **unarrived** waiter bounds it by ``arrival - iteration``
+          (admission is a host event);
+        * an **arrived-but-blocked** waiter (no free slot / pool too full
+          now) bounds it by the earliest runner completion — a completion
+          is exactly the admission opportunity it is waiting for;
+        * otherwise every runner gets its own remaining generation budget
+          and simply dies mid-span on device while the rest continue.
+
+        Pre-reservation: each runner is granted blocks for its *whole*
+        span before dispatch (positions up to ``lens + steps[b]``), so K
+        iterations can never outgrow a block table mid-loop.  If the pool
+        cannot cover the spans without eviction the horizon shrinks until
+        it can; at k == 1 nothing is reserved and the caller falls back.
+        """
+        if cap <= 1 or self.prefilling():
+            return 1, None
+        runners = self.running()
+        if not runners:
+            return 1, None
+        budgets = {r.rid: r.max_new_tokens - len(r.out) for r in runners}
+        k = min(int(cap), max(budgets.values()))  # nobody can use more
+        unarrived = [r.arrival for r in self.waiting if r.arrival > iteration]
+        if unarrived:
+            k = min(k, min(unarrived) - iteration)
+        if any(r.arrival <= iteration for r in self.waiting):
+            # an arrived waiter is blocked on slots/pool: the earliest
+            # completion is its admission opportunity, stop there
+            k = min(k, min(budgets.values()))
+
+        def need(kk: int) -> dict:
+            per = {}
+            for r in runners:
+                span = min(kk, budgets[r.rid])
+                n = self._blocks_for(int(self.lens[r.slot]) + span)
+                n -= len(r.blocks)
+                if n > 0:
+                    per[r.rid] = n
+            return per
+
+        while k > 1 and sum(need(k).values()) > self.alloc.available:
+            k -= 1
+        if k <= 1:
+            return 1, None
+        per = need(k)
+        for r in runners:
+            n = per.get(r.rid, 0)
+            if n:
+                got = self.alloc.alloc(n)  # covered: sum(per) <= available
+                start = len(r.blocks)
+                r.blocks.extend(got)
+                self.table[r.slot, start : len(r.blocks)] = got
+        steps = np.zeros((self.serve.decode_batch,), np.int32)
+        for r in runners:
+            steps[r.slot] = min(k, budgets[r.rid])
+        return k, steps
+
+    def _rolled_done(self, out: np.ndarray, steps: np.ndarray) -> dict:
+        """[internal] Consume one rolled dispatch: append each slot's span
+        of sampled tokens, advance its length, retire exhausted requests and
+        register newly-full blocks — the K=1 bookkeeping, span-sized.
+        ``out[b, :steps[b]]`` are slot b's tokens in order."""
+        now = time.perf_counter()
+        c = {"generated": 0}
+        for b, req in enumerate(self.slots):
+            if req is None or steps[b] == 0:
+                continue
+            emit = [int(t) for t in out[b, : int(steps[b])]]
+            self.lens[b] += len(emit)
+            req.out.extend(emit)
+            c["generated"] += len(emit)
+            if req.done:
+                self._finish(req, now)
+            else:
+                self._register_full_blocks(req, int(self.lens[b]))
+        return c
 
     def _register_full_blocks(self, req: Request, n_written: int) -> None:
         """Index every newly *full* block of a live request.

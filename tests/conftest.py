@@ -13,6 +13,16 @@ except ImportError:
     _install_hypothesis_stub()
 
 
+def assert_traces_bounded(trace_counts: dict) -> None:
+    """The serving engine's no-retrace contract: at most TWO compiled
+    device programs ever — the unified mixed step (exactly once) and, when
+    rolling is enabled and engaged, the rolled decode loop (at most once).
+    Request churn, draft depth and horizon K are data, never shapes."""
+    assert set(trace_counts) <= {"step", "rolled_step"}, trace_counts
+    assert trace_counts["step"] == 1, trace_counts
+    assert trace_counts.get("rolled_step", 0) <= 1, trace_counts
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

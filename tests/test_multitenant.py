@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_traces_bounded
+
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -221,7 +223,7 @@ def test_trace_replay_engine_parity_and_report(key):
         outs[sharing] = eng.run(trace())
         if sharing:
             summ = eng.summary()
-            assert summ["traces"] == {"step": 1}
+            assert_traces_bounded(summ["traces"])
             assert summ["prefix"]["hits"] > 0
             assert set(summ["tenants"]) == {"tenant0", "tenant1"}
             report = per_class_report(eng.sched.finished)
@@ -247,7 +249,7 @@ def test_serve_args_maps_one_to_one_onto_plan_overrides():
         "mixed_slab_width": 16, "pages_per_tile": 2, "fused_attention": False,
         "kv_dtype": "int8", "draft": "ngram", "spec_len": 2,
         "prefix_sharing": False, "slo_ttft_ms": 250.0,
-        "typical_prompt_len": 32,
+        "typical_prompt_len": 32, "rolled_steps": None,
     }
     cfg = get_config("smollm-135m")
     sp = derive_serve_plan(cfg, MESH1, TPU_V5E, **ov)

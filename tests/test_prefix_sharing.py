@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_traces_bounded
+
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -139,7 +141,7 @@ def test_shared_system_prompt_staggered_parity(key):
     assert on == off
     for i, t in enumerate(tails):
         assert on[f"r{i}"] == _oracle(params, cfg, plan, sysp + t, 6)
-    assert eng_on.trace_counts == {"step": 1}
+    assert_traces_bounded(eng_on.trace_counts)
     p = eng_on.summary()["prefix"]
     assert p["hits"] >= 3 and p["tokens_saved"] > 0
     assert eng_on.stats["prefill_tokens"] < eng_off.stats["prefill_tokens"]
@@ -169,7 +171,7 @@ def test_fork_on_write_non_block_aligned_divergence(key):
     assert on["div"] == _oracle(params, cfg, plan, p1, 8)
     p = eng_on.summary()["prefix"]
     assert p["forks"] >= 1 and p["fork_copies"] >= 1
-    assert eng_on.trace_counts == {"step": 1}
+    assert_traces_bounded(eng_on.trace_counts)
 
 
 def test_shared_prefix_eviction_while_sharer_decodes(key):
@@ -258,7 +260,7 @@ def test_speculative_decode_over_shared_prefix_parity(key):
     )
     assert plain.run(reqs()) == on
     assert eng_on.summary()["prefix"]["hits"] >= 2
-    assert eng_on.trace_counts == {"step": 1}
+    assert_traces_bounded(eng_on.trace_counts)
 
 
 def test_plan_prefix_sharing_flag_reaches_engine(key):

@@ -1,0 +1,107 @@
+"""Differential trace replay: one seeded workload through EVERY engine
+configuration axis, byte-compared to the eager oracle per request.
+
+The serving stack now has four independently-toggleable mechanisms that all
+promise "changes speed, never tokens": prefix sharing (refcounted blocks +
+copy-on-write forks), speculative decoding (draft gamma), the rolled
+on-device decode loop (K decode iterations per dispatch) and the KV page
+dtype.  Hand-picked scenarios cover each mechanism alone; this harness
+replays the SAME multi-tenant trace (``serve/workload.make_trace``, fixed
+seed) through the full cross product and asserts every request's output is
+byte-identical to ``greedy_generate`` — so any interaction bug between two
+mechanisms (e.g. a rolled span crossing a forked block, or draft rollback
+under int8 pages) fails loudly with the config tuple in the test id.
+
+Conventions (docs/TESTING.md): extend AXES when a new engine mechanism
+lands, rather than adding a one-off scenario file — the matrix is the
+regression net.
+"""
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import assert_traces_bounded
+
+from repro.configs import get_config
+from repro.core.plan import derive_plan, derive_serve_plan
+from repro.serve import Request, ServingEngine, greedy_generate, make_trace
+from repro.serve.speculative import NGramDraft
+
+pytestmark = pytest.mark.slow
+
+MESH1 = {"data": 1, "model": 1}
+MIX = {"chat": 2, "classify": 2}
+MAX_SEQ = 96
+
+# the full configuration cross product: prefix sharing x draft gamma x
+# rolled cap K x KV page dtype (16 engines, one trace, one oracle)
+AXES = list(itertools.product(
+    (False, True),      # prefix sharing
+    (0, 2),             # speculation gamma
+    (1, 4),             # rolled cap K
+    ("int8", "bf16"),   # KV page dtype
+))
+
+
+@pytest.fixture(scope="module")
+def world(key):
+    """Model, plan, params, the seeded trace shape, and the per-request
+    oracle — computed once for all 16 configurations."""
+    cfg = get_config("smollm-135m").reduced()
+    plan = derive_plan(cfg, MESH1, batch=4, seq_len=16, training=False)
+    from repro.models.params import init_params
+
+    params = init_params(key, cfg, plan, dtype=jnp.float32)
+    trace = make_trace(cfg, MIX, tenants=2, system_prompt_len=16,
+                       stagger=1, seed=5, max_tokens=MAX_SEQ)
+    oracle = {}
+    for r in trace:
+        out = greedy_generate(
+            params, cfg, plan, {"tokens": jnp.asarray(r.prompt)[None]},
+            n_steps=r.max_new_tokens, cache_len=len(r.prompt) + r.max_new_tokens,
+            cache_dtype=jnp.float32,
+        )
+        oracle[r.rid] = [int(t) for t in np.asarray(out)[0]]
+    return cfg, plan, params, oracle
+
+
+def _fresh_trace(cfg):
+    # the scheduler mutates Request state in place: fresh objects per
+    # engine, same seed -> identical prompts/arrivals/budgets
+    return make_trace(cfg, MIX, tenants=2, system_prompt_len=16,
+                      stagger=1, seed=5, max_tokens=MAX_SEQ)
+
+
+@pytest.mark.parametrize("sharing,gamma,rolled,kv", AXES,
+                         ids=lambda v: str(v).lower())
+def test_differential_trace_replay(world, sharing, gamma, rolled, kv):
+    cfg, plan, params, oracle = world
+    serve = derive_serve_plan(
+        cfg, MESH1,
+        max_seq_len=MAX_SEQ, decode_batch=3, block_size=8, kv_dtype=kv,
+        prefill_chunk=8, prefix_sharing=sharing,
+        draft="ngram" if gamma else "none", spec_len=gamma,
+        rolled_steps=rolled,
+    )
+    engine = ServingEngine(
+        params, cfg, plan, serve, draft=NGramDraft() if gamma else None
+    )
+    got = engine.run(_fresh_trace(cfg))
+    for rid, want in oracle.items():
+        assert got[rid] == want, (
+            f"sharing={sharing} gamma={gamma} K={rolled} kv={kv}: "
+            f"{rid} diverged: {got[rid]} != {want}"
+        )
+    assert_traces_bounded(engine.trace_counts)
+    # each mechanism must actually have engaged, or the row proves nothing
+    if sharing:
+        assert engine.sched.n_prefix_hits > 0
+    if gamma:
+        assert engine.spec_len == gamma
+        assert engine.trace_counts == {"step": 1}  # rolled gated off
+    if rolled > 1 and gamma == 0:
+        assert engine.rolled_cap == rolled
+        assert engine.stats["rolled_dispatches"] >= 1
+        assert engine.stats["rolled_steps"] >= engine.stats["rolled_dispatches"]
