@@ -7,6 +7,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        family_search,
         fig5_batch_sweep,
         multitenant_bench,
         paged_attn_bench,
@@ -30,6 +31,7 @@ def main() -> None:
         paged_attn_bench,
         spec_decode_bench,
         multitenant_bench,
+        family_search,
     ):
         try:
             mod.run()

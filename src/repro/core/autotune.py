@@ -21,8 +21,9 @@ import time
 from typing import Optional
 
 from repro.configs import get_config
-from repro.core.hardware import TPU_V5E
+from repro.core.hardware import TPU_V5E, HardwareSpec
 from repro.core.hlo_cost import analyze_hlo
+from repro.core.pu import MMTileSpec, pick_pu
 from repro.core.roofline import _ring_seconds, analytic_memory_floor
 
 
@@ -64,7 +65,8 @@ def score_candidate(cfg, shape, mesh, cand: Candidate, hw=TPU_V5E) -> Candidate:
             _ring_seconds(o, b, g, hw.ici_bandwidth_per_link) * m
             for o, b, g, m in hc.collectives
         )
-        floor_s = analytic_memory_floor(cfg, shape, plan, n_chips) / hw.hbm_bandwidth
+        floor_bytes = analytic_memory_floor(cfg, shape, plan, n_chips)
+        floor_s = floor_bytes / hw.hbm_bandwidth if hw.hbm_bandwidth > 0 else 0.0
         ma = compiled.memory_analysis()
         cand.compute_s = compute_s
         cand.collective_s = coll_s
@@ -75,6 +77,21 @@ def score_candidate(cfg, shape, mesh, cand: Candidate, hw=TPU_V5E) -> Candidate:
     except Exception as e:  # infeasible candidate = informative result
         cand.error = f"{type(e).__name__}: {e}"
     return cand
+
+
+def resolve_serve_tile(cfg, serve, hw: HardwareSpec = TPU_V5E) -> MMTileSpec:
+    """Pallas MM tile for one serving design point (family-search hook).
+
+    The unified step's dominant MM site is the fused QKV projection over the
+    live slab rows: every decode slot contributes its 1 + gamma verify rows,
+    so m = decode_batch * (1 + spec_len), n = the fused QKV width, and
+    k = d_model.  ``pick_pu`` applies the paper's padding-overhang rule to
+    that site on the *target* device, which is how each Pareto frontier
+    point carries its own autotuned tile parameters
+    (core/search.py attaches the result to the point's record)."""
+    rows = serve.decode_batch * (1 + serve.spec_len)
+    qkv_width = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.d_head
+    return pick_pu(max(rows, 1), qkv_width, cfg.d_model, hw, dtype_bytes=2)
 
 
 def autotune(arch: str, shape, *, multi_pod: bool = False, hw=TPU_V5E,

@@ -650,7 +650,11 @@ def derive_serve_plan(
         return tok
 
     # Roofline batch: tokens per step needed to amortize the weight stream.
-    ridge = max(1, int(hw.machine_balance_bf16 * 2.0 / (2.0 * max(ma, 1))))
+    # A degenerate device with no off-chip bandwidth reports an infinite
+    # machine balance (nothing amortizes); clamp so the int() below is total
+    # — the KV-capacity cap then decides the batch alone.
+    balance = min(hw.machine_balance_bf16, 2.0**20)
+    ridge = max(1, int(balance * 2.0 / (2.0 * max(ma, 1))))
     if kv_dtype is None:
         want = decode_batch or _pow2_floor(ridge)
         fits_bf16 = want * max_seq_len * per_token("bf16") <= kv_budget
@@ -727,14 +731,14 @@ def derive_serve_plan(
             # gamma+1 <= slack keeps verification bandwidth-bound; the -1
             # converts rows to drafts, and the cap of 8 bounds the verify
             # logits width (diminishing returns far before the slab does).
-            slack = hw.machine_balance_bf16 / max(int(decode_batch), 1)
+            slack = min(hw.machine_balance_bf16, 2.0**20) / max(int(decode_batch), 1)
             spec_len = max(0, min(int(slack) - 1, 8))
     if slo_ttft_ms is not None:
         # Under a TTFT target draft rows compete with prompt chunks for the
         # slab and lengthen the very steps the target budgets, so gamma only
         # keeps the slack it can *halve*: rein it in to slack//2 - 1 (0 when
         # the roofline slack is thin).
-        slack = hw.machine_balance_bf16 / max(int(decode_batch), 1)
+        slack = min(hw.machine_balance_bf16, 2.0**20) / max(int(decode_batch), 1)
         spec_len = min(int(spec_len), max(0, int(slack) // 2 - 1))
     spec_len = max(0, min(int(spec_len), int(mixed_slab_width) - 1))
     return ServePlan(

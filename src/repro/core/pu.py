@@ -70,11 +70,12 @@ def is_compute_bound(spec: MMTileSpec, hw: HardwareSpec) -> bool:
     tile *edge* from below (edge/2 >= machine balance, i.e. edge >= ~482 on
     v5e bf16), exactly how Eq. 4 bounds PLIO_AIE from above.
     """
-    balance = (
-        hw.machine_balance_bf16
-        if spec.dtype_bytes >= 2
-        else hw.peak_ops_int8 / hw.hbm_bandwidth
-    )
+    if spec.dtype_bytes >= 2:
+        balance = hw.machine_balance_bf16  # inf when hbm_bandwidth == 0
+    elif hw.hbm_bandwidth > 0:
+        balance = hw.peak_ops_int8 / hw.hbm_bandwidth
+    else:
+        balance = math.inf
     return spec.arithmetic_intensity >= balance
 
 

@@ -24,6 +24,7 @@ effective-utilization analog (how much compiled compute is "useful").
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.hardware import HardwareSpec
 from repro.core.hlo_cost import HloCost, analyze_hlo
@@ -123,8 +124,14 @@ def analyze(
         d["operand_bytes"] += b * m
 
     compute_s = flops / hw.peak_flops_bf16
-    memory_s = byts / hw.hbm_bandwidth
-    floor_s = memory_floor_bytes / hw.hbm_bandwidth
+    # A zero-bandwidth device (degenerate SRAM-only variant) makes any HBM
+    # traffic unserviceable: report inf rather than divide by zero.
+    if hw.hbm_bandwidth > 0:
+        memory_s = byts / hw.hbm_bandwidth
+        floor_s = memory_floor_bytes / hw.hbm_bandwidth
+    else:
+        memory_s = math.inf if byts else 0.0
+        floor_s = math.inf if memory_floor_bytes else 0.0
     spec_s = op_bytes / link_bw if link_bw else 0.0
     # Bottleneck attribution uses the analytic memory floor: the HLO-derived
     # byte count reflects CPU-backend fusion boundaries and would otherwise

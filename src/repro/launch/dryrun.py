@@ -5,8 +5,13 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
 
+    # accelerator-family mode: sweep the serving design space on one device
+    # and print/write the Pareto frontier (tokens/s vs $/token vs J/token)
+    PYTHONPATH=src python -m repro.launch.dryrun --family --hardware tpu_v5e
+
 Results go to benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json
-(incremental: existing cells are skipped unless --force).
+(incremental: existing cells are skipped unless --force); --family reports
+go to benchmarks/results/family/<hardware>__<arch>.json.
 """
 # The dry-run (and ONLY the dry-run) needs 512 placeholder devices; this must
 # run before ANY other import that touches jax.
@@ -258,10 +263,44 @@ def main():
         help="search plan candidates for --arch/--shape and report the winner",
     )
     ap.add_argument(
+        "--family", action="store_true",
+        help="design-space search: emit the Pareto frontier of serving "
+             "accelerator variants for --arch on --hardware "
+             "(tokens/s vs $/token vs J/token; docs/PLANNER.md)",
+    )
+    ap.add_argument(
+        "--hardware", default="tpu_v5e",
+        help="registered device name for --family (see "
+             "repro.core.hardware.registered_hardware)",
+    )
+    ap.add_argument(
+        "--max-seq", type=int, default=2048,
+        help="serving context bound for the --family sweep",
+    )
+    ap.add_argument(
         "--bench-out", default=None,
         help="write an aggregate JSON of all cells run (CI benchmark artifact)",
     )
     a = ap.parse_args()
+
+    if a.family:
+        from repro.core.search import family_report
+
+        arch = a.arch or "qwen3-1.7b"
+        out_dir = RESULTS.parent / "family"
+        result, record = family_report(
+            arch, a.hardware, max_seq_len=a.max_seq, out_dir=out_dir,
+        )
+        print(record["markdown"])
+        print(f"wrote {out_dir / (result.hardware + '__' + arch + '.json')}")
+        if a.bench_out:
+            pathlib.Path(a.bench_out).write_text(
+                json.dumps(record, indent=1, default=str)
+            )
+            print(f"wrote {a.bench_out}")
+        if not result.frontier:
+            raise SystemExit("empty frontier: no feasible design point")
+        return
 
     if a.autotune:
         from repro.configs import ALL_SHAPES as _AS

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.hardware import TPU_V5E
+from repro.core.hardware import get_hardware
 from repro.core.plan import derive_plan, derive_serve_plan, serve_feasible
 from repro.dist.sharding import Shardings
 from repro.launch.mesh import make_host_mesh
@@ -89,6 +89,12 @@ class ServeArgs:
     no_prefix_sharing: bool = False
     slo_ttft_ms: Optional[float] = None
     rolled_steps: Optional[int] = None
+    # ---- device + family pick ----
+    hardware: str = "tpu_v5e"  # registered HardwareSpec the plans derive from
+    # Pick the serving plan off the design-space Pareto frontier instead of
+    # deriving one: "throughput" | "cost" | "energy" (core/search.py;
+    # docs/PLANNER.md).  Individual plan-override flags are ignored then.
+    from_family: Optional[str] = None
     # ---- multi-tenant trace replay ----
     trace: Optional[str] = None  # workload mix, e.g. "chat:4,classify:2"
     tenant_mix: int = 2  # tenants sharing per-tenant system prompts
@@ -131,23 +137,62 @@ class ServeArgs:
         )
 
 
+def pick_from_family(a: ServeArgs, cfg, mesh, hw):
+    """Resolve the ServePlan from the Pareto frontier (--from-family).
+
+    The search is restricted to the launcher's actual model-axis degree so
+    the picked plan is runnable on this mesh; the criterion selects the
+    frontier's throughput-, cost-, or energy-optimal point."""
+    import dataclasses as _dc
+
+    from repro.core.search import default_space, search_family
+
+    ma = dict(mesh.shape).get("model", 1)
+    space = _dc.replace(
+        default_space(hw, max_seq_len=a.max_seq), mesh_models=(ma,)
+    )
+    result = search_family(cfg, hw, space)
+    if not result.frontier:
+        raise SystemExit(f"empty family frontier for {cfg.name} on {hw.name}")
+    key = {
+        "throughput": lambda p: -p.tokens_per_s,
+        "cost": lambda p: p.usd_per_mtok,
+        "energy": lambda p: p.mj_per_tok,
+    }[a.from_family]
+    point = min(result.frontier, key=key)
+    print(
+        f"family pick ({a.from_family}-optimal of {len(result.frontier)} "
+        f"frontier points on {hw.name}): {point.tokens_per_s:.0f} tok/s, "
+        f"${point.usd_per_mtok:.3f}/Mtok, {point.mj_per_tok:.2f} mJ/tok, "
+        f"tile {point.tile}"
+    )
+    return point.plan
+
+
 def run_batched(a: ServeArgs, cfg, mesh) -> dict:
+    hw = get_hardware(a.hardware)
     plan = derive_plan(
-        cfg, dict(mesh.shape), TPU_V5E,
+        cfg, dict(mesh.shape), hw,
         batch=a.batch, seq_len=a.prompt_len, training=False,
     )
-    serve = derive_serve_plan(cfg, dict(mesh.shape), TPU_V5E, **a.plan_overrides())
+    if a.from_family:
+        serve = pick_from_family(a, cfg, mesh, hw)
+    else:
+        serve = derive_serve_plan(cfg, dict(mesh.shape), hw, **a.plan_overrides())
     print(plan.describe())
     print(serve.describe())
     sh = Shardings(mesh, plan, cfg)
     params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
     params = jax.device_put(params, sh.param_shardings(params))
     draft = None
-    if a.draft and serve.spec_len == 0:
+    draft_name = a.draft
+    if a.from_family and not draft_name and serve.spec_len > 0:
+        draft_name = serve.draft  # the frontier point decided to speculate
+    if draft_name and serve.spec_len == 0:
         print("roofline slack leaves no free verification rows at this "
               "decode batch: speculation stays off (gamma = 0)")
-    elif a.draft:
-        draft = make_draft_source(a.draft, cfg, serve, hw=TPU_V5E, seed=2)
+    elif draft_name:
+        draft = make_draft_source(draft_name, cfg, serve, hw=hw, seed=2)
     engine = ServingEngine(params, cfg, plan, serve, shardings=sh, draft=draft)
     if engine.fused != serve.fused_attention:
         print("multi-device mesh: unified step falls back to the gather path "
@@ -164,7 +209,7 @@ def run_batched(a: ServeArgs, cfg, mesh) -> dict:
 
 def run_eager(a: ServeArgs, cfg, mesh) -> dict:
     plan = derive_plan(
-        cfg, dict(mesh.shape), TPU_V5E,
+        cfg, dict(mesh.shape), get_hardware(a.hardware),
         batch=a.batch, seq_len=a.prompt_len, training=False,
     )
     params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
@@ -234,6 +279,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="cap K of the rolled on-device decode loop (decode "
                          "iterations per dispatch; default: derived from the "
                          "dispatch-overhead roofline; 1 disables)")
+    ap.add_argument("--hardware", default="tpu_v5e",
+                    help="registered HardwareSpec name the plans derive from "
+                         "(variants: repro.core.hardware.HARDWARE_VARIANTS)")
+    ap.add_argument("--from-family", default=None,
+                    choices=[None, "throughput", "cost", "energy"],
+                    help="pick the serving plan off the design-space Pareto "
+                         "frontier (core/search.py) instead of deriving one; "
+                         "the criterion chooses the frontier point")
     ap.add_argument("--trace", default=None,
                     help="multi-tenant trace replay: workload mix spec like "
                          "'chat:4,summarize:2,classify:2' (replaces "
