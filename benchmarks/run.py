@@ -8,6 +8,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         family_search,
+        faults_bench,
         fig5_batch_sweep,
         multitenant_bench,
         paged_attn_bench,
@@ -31,6 +32,7 @@ def main() -> None:
         paged_attn_bench,
         spec_decode_bench,
         multitenant_bench,
+        faults_bench,
         family_search,
     ):
         try:

@@ -470,6 +470,30 @@ class ServePlan:
     # drive the scheduler's runtime chunk sizing; this field records the
     # planning-time decision.  None = throughput-shaped plan.
     slo_ttft_ms: Optional[float] = None
+    # --- robustness knobs (fault-tolerance ladder; see docs/ROBUSTNESS.md) ---
+    # Fleet-default wall-clock deadline (ms from submit) after which a
+    # request is cancelled and its blocks/radix refs released; per-request
+    # ``Request.deadline_ms`` overrides.  None = no deadline.
+    deadline_ms: Optional[float] = None
+    # Transient-dispatch retries per ladder rung before stepping down
+    # rolled-K -> K=1 mixed -> eager gather fallback (then giving up).
+    retry_limit: int = 3
+    # Base for the exponential retry backoff: sleep backoff * 2^(attempt-1)
+    # seconds (capped at 0.25 s) between retries.  Tests set it to 0.
+    retry_backoff_s: float = 0.001
+    # Consecutive healthy dispatches before the engine climbs one rung
+    # back up the ladder.
+    ladder_recovery: int = 32
+    # Iterations an *arrived* request may sit admission-blocked (pool or
+    # slot saturation) before it is shed with a retry-after hint, instead
+    # of livelocking behind eviction.
+    admission_patience: int = 128
+    # Consecutive no-progress engine iterations (no tokens, no admission,
+    # no completion) before ``run()`` raises StallError carrying health().
+    stall_limit: int = 256
+    # Consecutive quarantined (non-finite logits) steps for one slot before
+    # the request is cancelled as poisoned rather than replayed again.
+    quarantine_limit: int = 8
     # Diagnostics (logged + dryrun records).
     kv_bytes_per_token: int = 0
     hbm_kv_budget_bytes: int = 0
@@ -509,6 +533,13 @@ class ServePlan:
             "draft": self.draft,
             "prefix_sharing": self.prefix_sharing,
             "slo_ttft_ms": self.slo_ttft_ms,
+            "deadline_ms": self.deadline_ms,
+            "retry_limit": self.retry_limit,
+            "retry_backoff_s": self.retry_backoff_s,
+            "ladder_recovery": self.ladder_recovery,
+            "admission_patience": self.admission_patience,
+            "stall_limit": self.stall_limit,
+            "quarantine_limit": self.quarantine_limit,
             "max_seq_len": self.max_seq_len,
             "kv_bytes_per_token": self.kv_bytes_per_token,
         }
@@ -569,6 +600,13 @@ def derive_serve_plan(
     prefix_sharing: bool = True,
     slo_ttft_ms: Optional[float] = None,
     typical_prompt_len: Optional[int] = None,
+    deadline_ms: Optional[float] = None,
+    retry_limit: int = 3,
+    retry_backoff_s: float = 0.001,
+    ladder_recovery: int = 32,
+    admission_patience: int = 128,
+    stall_limit: int = 256,
+    quarantine_limit: int = 8,
 ) -> ServePlan:
     """Pick decode batch / block size / KV dtype from the roofline model.
 
@@ -757,6 +795,13 @@ def derive_serve_plan(
         draft=str(draft),
         prefix_sharing=bool(prefix_sharing),
         slo_ttft_ms=None if slo_ttft_ms is None else float(slo_ttft_ms),
+        deadline_ms=None if deadline_ms is None else float(deadline_ms),
+        retry_limit=int(retry_limit),
+        retry_backoff_s=float(retry_backoff_s),
+        ladder_recovery=int(ladder_recovery),
+        admission_patience=int(admission_patience),
+        stall_limit=int(stall_limit),
+        quarantine_limit=int(quarantine_limit),
         max_seq_len=int(max_seq_len),
         kv_bytes_per_token=int(kv_tok),
         hbm_kv_budget_bytes=kv_budget,

@@ -89,6 +89,17 @@ class ServeArgs:
     no_prefix_sharing: bool = False
     slo_ttft_ms: Optional[float] = None
     rolled_steps: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    retry_limit: int = 3
+    stall_limit: int = 256
+    # ---- chaos injection (serve/faults.py; docs/ROBUSTNESS.md) ----
+    chaos_seed: Optional[int] = None  # None = no injector
+    chaos_transient: float = 0.0
+    chaos_burst: int = 1
+    chaos_nan: float = 0.0
+    chaos_pressure: float = 0.0
+    chaos_spike_ms: float = 0.0
+    chaos_horizon: Optional[int] = None
     # ---- device + family pick ----
     hardware: str = "tpu_v5e"  # registered HardwareSpec the plans derive from
     # Pick the serving plan off the design-space Pareto frontier instead of
@@ -120,7 +131,27 @@ class ServeArgs:
             "slo_ttft_ms": self.slo_ttft_ms,
             "rolled_steps": self.rolled_steps,
             "typical_prompt_len": self.prompt_len,
+            "deadline_ms": self.deadline_ms,
+            "retry_limit": self.retry_limit,
+            "stall_limit": self.stall_limit,
         }
+
+    def make_injector(self):
+        """Build the chaos injector when any --chaos-* flag asks for one."""
+        if self.chaos_seed is None:
+            return None
+        from repro.serve import FaultInjector
+
+        return FaultInjector(
+            self.chaos_seed,
+            transient_rate=self.chaos_transient,
+            transient_burst=self.chaos_burst,
+            nan_rate=self.chaos_nan,
+            pressure_rate=self.chaos_pressure,
+            spike_rate=1.0 if self.chaos_spike_ms > 0 else 0.0,
+            spike_ms=self.chaos_spike_ms,
+            horizon=self.chaos_horizon,
+        )
 
     def request_stream(self, cfg) -> list:
         if self.trace:
@@ -193,12 +224,19 @@ def run_batched(a: ServeArgs, cfg, mesh) -> dict:
               "decode batch: speculation stays off (gamma = 0)")
     elif draft_name:
         draft = make_draft_source(draft_name, cfg, serve, hw=hw, seed=2)
-    engine = ServingEngine(params, cfg, plan, serve, shardings=sh, draft=draft)
+    injector = a.make_injector()
+    if injector is not None:
+        print(f"chaos injection on: {injector.to_record()}")
+    engine = ServingEngine(
+        params, cfg, plan, serve, shardings=sh, draft=draft, injector=injector
+    )
     if engine.fused != serve.fused_attention:
         print("multi-device mesh: unified step falls back to the gather path "
               "(Pallas kernel is single-device for now)")
     out = engine.run(a.request_stream(cfg))
     summary = engine.summary()
+    if injector is not None:
+        print(f"engine health after chaos: {json.dumps(engine.health())}")
     first = next(iter(out))
     print(f"served {len(out)} requests; {first} -> {out[first]}")
     if a.trace:
@@ -279,6 +317,39 @@ def build_parser() -> argparse.ArgumentParser:
                     help="cap K of the rolled on-device decode loop (decode "
                          "iterations per dispatch; default: derived from the "
                          "dispatch-overhead roofline; 1 disables)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="fleet-default per-request deadline (wall-clock ms "
+                         "from submit); expiry cancels the request and "
+                         "releases its blocks")
+    ap.add_argument("--retry-limit", type=int, default=3,
+                    help="transient-dispatch retries per degradation-ladder "
+                         "rung before stepping down rolled -> mixed -> gather")
+    ap.add_argument("--stall-limit", type=int, default=256,
+                    help="consecutive no-progress iterations before run() "
+                         "raises StallError with an engine health dump")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="enable the deterministic fault injector with this "
+                         "seed (pair with --chaos-* rates; docs/ROBUSTNESS.md)")
+    ap.add_argument("--chaos-transient", type=float, default=0.0,
+                    help="per-iteration probability of a transient dispatch "
+                         "failure burst")
+    ap.add_argument("--chaos-burst", type=int, default=1,
+                    help="consecutive dispatch attempts each transient fault "
+                         "kills (longer than --retry-limit forces ladder "
+                         "escalation)")
+    ap.add_argument("--chaos-nan", type=float, default=0.0,
+                    help="per-slot per-iteration probability of non-finite "
+                         "logits (quarantine + replay keeps outputs "
+                         "byte-identical)")
+    ap.add_argument("--chaos-pressure", type=float, default=0.0,
+                    help="per-iteration probability of a temporary block-pool "
+                         "squeeze")
+    ap.add_argument("--chaos-spike-ms", type=float, default=0.0,
+                    help="artificial per-dispatch latency spike (stresses the "
+                         "SLO/EMA feedback); 0 disables")
+    ap.add_argument("--chaos-horizon", type=int, default=None,
+                    help="iteration after which no new fault fires (lets a "
+                         "chaotic stream drain deterministically)")
     ap.add_argument("--hardware", default="tpu_v5e",
                     help="registered HardwareSpec name the plans derive from "
                          "(variants: repro.core.hardware.HARDWARE_VARIANTS)")

@@ -16,6 +16,10 @@ The documented surface is deliberately small:
 * ``greedy_generate`` and the eager ``make_prefill_step`` /
   ``make_decode_step`` — the whole-batch fallback path (also the parity
   oracle).
+* :class:`FaultInjector` + the fault-tolerance error types
+  (:class:`TransientDeviceError`, :class:`StallError`,
+  :class:`LadderExhausted`) — the chaos harness and the exceptions the
+  hardened engine raises (see ``docs/ROBUSTNESS.md``).
 
 Everything else (``Scheduler``, ``BlockAllocator``, ``PrefixIndex``,
 ``make_mixed_step``, the slab-packing helpers) is engine internals:
@@ -28,6 +32,12 @@ from repro.serve.engine import (
     greedy_generate,
     make_decode_step,
     make_prefill_step,
+)
+from repro.serve.faults import (
+    FaultInjector,
+    LadderExhausted,
+    StallError,
+    TransientDeviceError,
 )
 from repro.serve.scheduler import Request, random_stream
 from repro.serve.speculative import make_draft_source
@@ -43,6 +53,11 @@ __all__ = [
     # engine
     "ServingEngine",
     "Request",
+    # fault tolerance / chaos harness
+    "FaultInjector",
+    "TransientDeviceError",
+    "StallError",
+    "LadderExhausted",
     # draft sources
     "make_draft_source",
     # streams / workloads

@@ -40,7 +40,14 @@ from repro.models.cache import (
     paged_copy_block,
 )
 from repro.models.transformer import forward, logits_fn
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.faults import (
+    LADDER,
+    FaultInjector,
+    LadderExhausted,
+    StallError,
+    TransientDeviceError,
+)
+from repro.serve.scheduler import DONE, WAITING, Request, Scheduler
 
 PyTree = Any
 Identity = lambda x, name=None: x
@@ -112,12 +119,20 @@ def make_mixed_step(
     """Build the ONE jitted unified mixed prefill/decode step.
 
     ``step(params, pools, tokens (B, W), tables (B, MB), lens (B,),
-    kinds (B,))`` returns ``(tok, vtok, pools)``: ``tok[b]`` is the greedy
-    token at slot b's last live row; ``vtok`` (B, spec_width) is the greedy
-    argmax at each of the slot's leading rows — the verification targets of
-    speculative decoding (row i scores the token that should follow the
-    slot's i-th slab token).  With ``spec_width == 1`` no extra logits are
-    computed and ``vtok`` is just ``tok[:, None]``.
+    kinds (B,), poison (B,))`` returns ``(tok, vtok, finite, pools)``:
+    ``tok[b]`` is the greedy token at slot b's last live row; ``vtok``
+    (B, spec_width) is the greedy argmax at each of the slot's leading
+    rows — the verification targets of speculative decoding (row i scores
+    the token that should follow the slot's i-th slab token).  With
+    ``spec_width == 1`` no extra logits are computed and ``vtok`` is just
+    ``tok[:, None]``.
+
+    ``finite[b]`` is the on-device health scalar — one bool per slot,
+    false when any logit the slot sampled from is non-finite — and the
+    host quarantines such slots instead of emitting garbage.  ``poison``
+    is an additive per-slot logit offset the chaos harness uses to inject
+    NaN (all-zero in production): it is *data*, not a shape, so the
+    no-retrace contract is untouched.
 
     Shared by :class:`ServingEngine` and the model drafter
     (``serve/speculative.ModelDraft``) — the drafter is mechanically a
@@ -128,7 +143,7 @@ def make_mixed_step(
         "pages_per_tile": serve.pages_per_tile,
     }
 
-    def step_fn(params, pools, tokens, tables, lens, kinds):
+    def step_fn(params, pools, tokens, tables, lens, kinds, poison):
         if trace is not None:
             trace[trace_key] += 1
         cache = {"layers": pools["layers"], "t": lens}
@@ -141,14 +156,21 @@ def make_mixed_step(
         # decode slots, the final prompt token on a last prefill chunk)
         idx = jnp.maximum(kinds - 1, 0)
         xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-        tok = jnp.argmax(logits_fn(params, xl, cfg)[:, -1], axis=-1)
+        logits = logits_fn(params, xl, cfg)[:, -1] + poison[:, None]
+        tok = jnp.argmax(logits, axis=-1)
+        # one extra scalar per slot: a NaN/Inf anywhere in the sampled
+        # logits poisons the sum, so isfinite(sum) is the whole check
+        finite = jnp.isfinite(jnp.sum(logits, axis=-1))
         if spec_width > 1:
             # verification targets: the target model's own greedy choice
             # after every leading row (drafted rows ride rows 1..gamma)
-            vtok = jnp.argmax(logits_fn(params, x[:, :spec_width], cfg), axis=-1)
+            vlog = logits_fn(params, x[:, :spec_width], cfg)
+            vlog = vlog + poison[:, None, None]
+            vtok = jnp.argmax(vlog, axis=-1)
+            finite = finite & jnp.isfinite(jnp.sum(vlog, axis=(-2, -1)))
         else:
             vtok = tok[:, None]
-        return tok, vtok, {"layers": nc["layers"]}
+        return tok, vtok, finite, {"layers": nc["layers"]}
 
     return jax.jit(step_fn, donate_argnums=(1,))
 
@@ -186,6 +208,14 @@ def make_rolled_step(
     ``steps_left`` are data, not shapes — one compile serves every horizon
     the scheduler picks, so ``trace_counts["rolled_step"]`` stays at 1.
     The static ``K = serve.rolled_steps`` only sizes the output buffer.
+
+    Fault tolerance inside the span: the loop carries a sticky per-slot
+    *dead* flag set the first iteration the slot's logits go non-finite
+    (``poison[b]`` lets the chaos harness force that at a chosen offset,
+    -1 = never; it is data, not a shape).  A dead slot stops advancing —
+    its length freezes at the last good position and its remaining output
+    columns stay -1 — so the host sees exactly where to replay from while
+    the healthy slots finish their spans.
     """
     page_state = {
         "block_size": serve.block_size,
@@ -194,40 +224,47 @@ def make_rolled_step(
     }
     K = int(serve.rolled_steps)
 
-    def rolled_fn(params, pools, tok, tables, lens, steps_left, k_steps):
+    def rolled_fn(params, pools, tok, tables, lens, steps_left, k_steps, poison):
         if trace is not None:
             trace[trace_key] += 1
         B = tok.shape[0]
 
         def cond(state):
-            i = state[0]
-            return jnp.logical_and(i < k_steps, jnp.any(steps_left > i))
+            i, dead = state[0], state[5]
+            return jnp.logical_and(i < k_steps, jnp.any((steps_left > i) & ~dead))
 
         def body(state):
-            i, tok, lens, layers, out = state
-            live = steps_left > i
+            i, tok, lens, layers, out, dead = state
+            live = (steps_left > i) & ~dead
             kinds = live.astype(jnp.int32)
             x, nc, _ = forward(
                 params, {"tokens": tok[:, None]}, cfg=cfg, plan=plan,
                 cache={"layers": layers, "t": lens}, shard=shard,
                 page_state={**page_state, "table": tables, "q_lens": kinds},
             )
-            nxt = jnp.argmax(logits_fn(params, x, cfg)[:, -1], axis=-1)
-            nxt = nxt.astype(jnp.int32)
+            logits = logits_fn(params, x, cfg)[:, -1]
+            logits = logits + jnp.where(poison == i, jnp.float32(jnp.nan), 0.0)[
+                :, None
+            ]
+            ok = jnp.isfinite(jnp.sum(logits, axis=-1))
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            good = live & ok
             return (
                 i + 1,
-                jnp.where(live, nxt, tok),
-                lens + kinds,
+                jnp.where(good, nxt, tok),
+                lens + good.astype(jnp.int32),
                 nc["layers"],
-                out.at[:, i].set(jnp.where(live, nxt, -1)),
+                out.at[:, i].set(jnp.where(good, nxt, -1)),
+                dead | (live & ~ok),
             )
 
-        _, _, lens, layers, out = jax.lax.while_loop(
+        _, _, lens, layers, out, _ = jax.lax.while_loop(
             cond,
             body,
             (
                 jnp.int32(0), tok, lens, pools["layers"],
                 jnp.full((B, K), -1, jnp.int32),
+                jnp.zeros((B,), bool),
             ),
         )
         return out, lens, {"layers": layers}
@@ -309,6 +346,7 @@ class ServingEngine:
         shardings=None,
         fused: Optional[bool] = None,
         draft=None,
+        injector: Optional[FaultInjector] = None,
     ):
         ok, reason = serve_feasible(cfg)
         if not ok:
@@ -322,6 +360,8 @@ class ServingEngine:
                 self.pools, shardings.cache_shardings(self.pools)
             )
         shard = shardings.constrain if shardings is not None else Identity
+        self._shard = shard
+        self.injector = injector
         if fused is None:
             # GSPMD cannot partition the Pallas call over a multi-device
             # mesh yet (ROADMAP: shard_map decode); those engines fall
@@ -343,7 +383,19 @@ class ServingEngine:
             "draft_rows": 0, "accepted_drafts": 0, "spec_slots": 0,
             "spec_generated": 0, "fork_copies": 0, "occupancy_sum": 0.0,
             "rolled_dispatches": 0, "rolled_steps": 0, "device_s": 0.0,
+            "retries": 0, "transient_faults": 0, "rung_escalations": 0,
+            "rung_recoveries": 0, "quarantines": 0, "poisoned": 0,
+            "expired": 0, "shed": 0, "cancelled": 0, "injected_nans": 0,
         }
+        # degradation ladder: 0 = rolled-K spans, 1 = K=1 mixed step,
+        # 2 = eager gather fallback (built lazily).  Transient-fault
+        # retries that exhaust retry_limit step DOWN; ladder_recovery
+        # consecutive healthy dispatches step back UP.
+        self.rung = 0
+        self._healthy = 0
+        self._gather = None
+        self._last_fault: Optional[dict] = None
+        self._no_poison = np.zeros((serve.decode_batch,), np.float32)
         # copy-on-write fork: one jitted block copy, reused for every fork
         # (block ids are data, not shapes — compiles once, retraces never;
         # deliberately NOT counted in ``trace_counts``, which is the mixed
@@ -370,10 +422,50 @@ class ServingEngine:
             )
         else:
             self._rolled = None
+        # engines without a rolled loop live on the "mixed" rung; recovery
+        # never climbs above the floor
+        self._rung_floor = 0 if self._rolled is not None else 1
+        self.rung = self._rung_floor
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
+        """Queue a request, validating the construction fields up front —
+        a malformed request must fail here with the field named, not steps
+        later inside the scheduler as an opaque shape error."""
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: prompt must not be empty")
+        if req.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be positive,"
+                f" got {req.max_new_tokens}"
+            )
+        if len(req.prompt) >= self.serve.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)}"
+                f" >= max_seq_len {self.serve.max_seq_len}"
+            )
+        vocab = self.cfg.vocab_size
+        for i, t in enumerate(req.prompt):
+            if not 0 <= int(t) < vocab:
+                raise ValueError(
+                    f"request {req.rid}: prompt token id {int(t)} at"
+                    f" position {i} outside vocab range [0, {vocab})"
+                )
+        if req.deadline_ms is None:
+            req.deadline_ms = self.serve.deadline_ms
         self.sched.submit(req)
+
+    def cancel(self, rid: str) -> bool:
+        """Cancel a queued or in-flight request by id, releasing its
+        blocks/radix refs; returns False when no live request matches."""
+        for r in list(self.sched.waiting) + [
+            s for s in self.sched.slots if s is not None
+        ]:
+            if r.rid == rid:
+                self.sched.cancel(r, status="cancelled")
+                self.stats["cancelled"] += 1
+                return True
+        return False
 
     def reset_stats(self) -> None:
         """Zero the throughput counters, finished-request latency samples and
@@ -385,6 +477,7 @@ class ServingEngine:
             self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
         self.stats.pop("wall_s", None)
         self.sched.finished = []
+        self.sched.shed = []
         self.iteration = 0
 
     def _propose_drafts(self) -> dict:
@@ -412,53 +505,159 @@ class ServingEngine:
         props = self.draft.propose(asks)
         return {rid: list(d) for rid, d in props.items() if d}
 
-    def step(self) -> None:
-        """One engine iteration: admit -> fork copies -> draft -> grow ->
-        one unified mixed step -> accept/rollback.
+    # ------------------------------------------------- degradation ladder
+    def _gather_step(self):
+        """Rung-2 fallback: the same mixed step compiled without the fused
+        Pallas kernel (dense gather attention).  Built lazily — production
+        never pays its compile unless the ladder actually reaches it — and
+        traced under its own key so the no-retrace contract stays auditable
+        (``fallback_step`` <= 1)."""
+        if self._gather is None:
+            self.trace_counts.setdefault("fallback_step", 0)
+            self._gather = make_mixed_step(
+                self.cfg, self.plan, self.serve, fused=False, shard=self._shard,
+                spec_width=self.spec_len + 1 if self.spec_len > 0 else 1,
+                trace=self.trace_counts, trace_key="fallback_step",
+            )
+        return self._gather
 
-        When the rolled loop is enabled and the scheduler's event horizon
-        allows K >= 2 decode iterations before the next host-required
-        event, one call dispatches the rolled step instead — K iterations,
-        one device program — and the iteration clock advances by the span.
-        Fallback to the ordinary K=1 slab is transparent (same tokens, the
-        differential harness asserts byte identity).
+    def _escalate(self) -> bool:
+        """Step one rung down the ladder; False when already at the bottom."""
+        if self.rung >= len(LADDER) - 1:
+            return False
+        self.rung += 1
+        self._healthy = 0
+        self.stats["rung_escalations"] += 1
+        return True
+
+    def _note_healthy(self) -> None:
+        self._healthy += 1
+        if self.rung > self._rung_floor and self._healthy >= self.serve.ladder_recovery:
+            self.rung -= 1
+            self._healthy = 0
+            self.stats["rung_recoveries"] += 1
+
+    def _note_fault(self, kind: str, detail: str) -> None:
+        self.stats["transient_faults"] += 1
+        self._healthy = 0
+        self._last_fault = {
+            "kind": kind, "iteration": self.iteration, "detail": detail,
+        }
+
+    def _backoff(self, attempt: int) -> None:
+        base = self.serve.retry_backoff_s
+        if base > 0:
+            time.sleep(min(base * 2 ** (attempt - 1), 0.25))
+
+    def _retry_transients(self) -> bool:
+        """Absorb transient dispatch faults for the upcoming device call
+        with bounded, exponentially backed-off retries.  True = cleared to
+        dispatch; False = this rung's retry budget is spent (the caller
+        escalates).  The check runs *before* the jitted call, so a failed
+        attempt never consumes the donated pool buffers.  (A production
+        backend would map real device errors — e.g. XlaRuntimeError — to
+        :class:`TransientDeviceError` at the same boundary.)"""
+        attempts = 0
+        while True:
+            if self.injector is None:
+                return True
+            try:
+                self.injector.check_dispatch(self.iteration)
+                return True
+            except TransientDeviceError as e:
+                self._note_fault("transient", str(e))
+                attempts += 1
+                if attempts > self.serve.retry_limit:
+                    return False
+                self.stats["retries"] += 1
+                self._backoff(attempts)
+
+    def _poison_vec(self, kinds: np.ndarray) -> np.ndarray:
+        """Per-slot additive logit poison for this iteration (chaos NaN
+        injection), masked to occupied slots; all-zero without an injector."""
+        if self.injector is None:
+            return self._no_poison
+        mask = self.injector.nan_mask(self.iteration, self.serve.decode_batch)
+        mask = mask & (np.asarray(kinds) > 0)
+        n = int(mask.sum())
+        if n == 0:
+            return self._no_poison
+        self.injector.counts["nan"] += n
+        self.stats["injected_nans"] += n
+        v = np.zeros((self.serve.decode_batch,), np.float32)
+        v[mask] = np.nan
+        return v
+
+    def step(self) -> None:
+        """One engine iteration: pressure/expiry -> admit -> shed -> fork
+        copies -> draft -> grow -> one unified mixed step -> accept/rollback.
+
+        When the rolled loop is enabled, the ladder sits at its top rung,
+        and the scheduler's event horizon allows K >= 2 decode iterations
+        before the next host-required event, one call dispatches the rolled
+        step instead — K iterations, one device program — and the iteration
+        clock advances by the span.  Fallback to the ordinary K=1 slab is
+        transparent (same tokens, the differential harness asserts byte
+        identity).
 
         Fork copies are applied immediately after admission, before anything
         can release blocks (growth/eviction run later in the iteration), so
         a copy's source block is still resident when the device reads it."""
         s = self.sched
+        if self.injector is not None:
+            self.injector.pressure(self.iteration, s.alloc)
+        self.stats["expired"] += s.expire_deadlines(time.perf_counter())
         s.admit(self.iteration)
+        self.stats["shed"] += s.shed_starved(self.iteration)
         for src, dst in s.drain_copies():
             self.pools = self._copy(
                 self.pools, jnp.int32(src), jnp.int32(dst)
             )
             self.stats["fork_copies"] += 1
-        if self._rolled is not None:
+        if self._rolled is not None and self.rung == 0:
             k, steps = s.plan_rolled(self.iteration, self.rolled_cap)
-            if k > 1:
-                self._rolled_dispatch(k, steps)
+            if k > 1 and self._rolled_dispatch(k, steps):
                 return
+            # retry exhaustion escalated mid-plan: fall through to the K=1
+            # path this iteration (pre-reserved span blocks stay with their
+            # slots; decode just proceeds one step at a time)
         drafts = self._propose_drafts()
         s._grow_for_decode({rid: len(d) for rid, d in drafts.items()})
         if s.busy():
             tokens, tables, lens, kinds = s._slab_view(
                 self.serve.mixed_slab_width, drafts
             )
-            traces_before = self.trace_counts["step"]
+            while not self._retry_transients():
+                if not self._escalate():
+                    raise LadderExhausted(
+                        "transient dispatch faults exhausted the retry ladder",
+                        self.health(),
+                    )
+            step_fn = self._step if self.rung < 2 else self._gather_step()
+            poison = self._poison_vec(kinds)
+            trace_key = "step" if self.rung < 2 else "fallback_step"
+            traces_before = self.trace_counts[trace_key]
             t0 = time.perf_counter()
-            sampled, vtok, self.pools = self._step(
-                self.params, self.pools, tokens, tables, lens, kinds
+            if self.injector is not None:
+                sp = self.injector.spike_s(self.iteration)
+                if sp:
+                    time.sleep(sp)
+            sampled, vtok, finite, self.pools = step_fn(
+                self.params, self.pools, tokens, tables, lens, kinds,
+                jnp.asarray(poison),
             )
             sampled = np.asarray(sampled)  # block for an honest step time
             vtok = np.asarray(vtok)
+            finite = np.asarray(finite)
             dt_ms = (time.perf_counter() - t0) * 1e3
             self.stats["device_s"] += dt_ms / 1e3
-            if self.trace_counts["step"] == traces_before:
+            self._note_healthy()
+            if self.trace_counts[trace_key] == traces_before:
                 # feed SLO chunk sizing a compile-free step-time estimate
                 s.step_ms = (
                     dt_ms if s.step_ms is None else 0.8 * s.step_ms + 0.2 * dt_ms
                 )
-            c = s._slab_done(sampled, kinds, vtok, drafts)
+            c = s._slab_done(sampled, kinds, vtok, drafts, finite=finite)
             self.stats["steps"] += 1
             self.stats["prefill_tokens"] += c["prefill"]
             self.stats["generated_tokens"] += c["generated"]
@@ -466,32 +665,56 @@ class ServingEngine:
             self.stats["accepted_drafts"] += c["accepted_drafts"]
             self.stats["spec_slots"] += c["spec_slots"]
             self.stats["spec_generated"] += c["spec_generated"]
+            self.stats["quarantines"] += c["quarantined"]
+            self.stats["poisoned"] += c["poisoned"]
             self.stats["occupancy_sum"] += (
                 int((kinds > 0).sum()) / self.serve.decode_batch
             )
         self.iteration += 1
 
-    def _rolled_dispatch(self, k: int, steps: np.ndarray) -> None:
+    def _rolled_dispatch(self, k: int, steps: np.ndarray) -> bool:
         """Run one rolled span: up to ``k`` decode iterations in ONE device
         dispatch (per-slot budgets ``steps``, blocks already pre-reserved by
         ``plan_rolled``).  Host bookkeeping happens once for the whole span;
         the iteration clock and the per-step stats advance by the span
-        length so rolled and K=1 runs stay comparable."""
+        length so rolled and K=1 runs stay comparable.
+
+        Returns False when transient faults spent this rung's retry budget
+        — the ladder escalated to the K=1 mixed rung and the caller falls
+        through to it for this iteration."""
         s = self.sched
+        if not self._retry_transients():
+            self._escalate()
+            return False
         tok0 = np.zeros((self.serve.decode_batch,), np.int32)
         for b, req in enumerate(s.slots):
             if req is not None and steps[b] > 0:
                 tok0[b] = req.out[-1]
+        poison = np.full((self.serve.decode_batch,), -1, np.int32)
+        if self.injector is not None:
+            poison = self.injector.nan_in_span(
+                self.iteration, k, self.serve.decode_batch
+            )
+            poison[np.asarray(steps) <= 0] = -1
+            n = int((poison >= 0).sum())
+            self.injector.counts["nan"] += n
+            self.stats["injected_nans"] += n
         traces_before = self.trace_counts["rolled_step"]
         t0 = time.perf_counter()
+        if self.injector is not None:
+            sp = self.injector.spike_s(self.iteration)
+            if sp:
+                time.sleep(sp)
         out, _, self.pools = self._rolled(
             self.params, self.pools, jnp.asarray(tok0),
             jnp.asarray(s.table), jnp.asarray(s.lens),
             jnp.asarray(steps, np.int32), jnp.int32(k),
+            jnp.asarray(poison),
         )
         out = np.asarray(out)  # block for an honest span time
         dt_ms = (time.perf_counter() - t0) * 1e3
         self.stats["device_s"] += dt_ms / 1e3
+        self._note_healthy()
         adv = int(steps.max())  # device iterations actually executed
         if self.trace_counts["rolled_step"] == traces_before and adv > 0:
             # per-iteration estimate feeds the same SLO chunk-sizing EMA
@@ -502,22 +725,197 @@ class ServingEngine:
         self.stats["rolled_dispatches"] += 1
         self.stats["rolled_steps"] += adv
         self.stats["generated_tokens"] += c["generated"]
+        self.stats["quarantines"] += c["quarantined"]
+        self.stats["poisoned"] += c["poisoned"]
         # same unit as the K=1 path: live-slot fraction summed per device
         # iteration (slot b is live for its first steps[b] iterations)
         self.stats["occupancy_sum"] += float(steps.sum()) / self.serve.decode_batch
         self.iteration += adv
+        return True
 
     def run(self, requests=(), max_iterations: int = 100_000) -> dict:
-        """Drive the stream to completion; returns {rid: generated tokens}."""
+        """Drive the stream to completion; returns {rid: generated tokens}
+        for requests that *finished* (shed/expired/cancelled requests are
+        reported through ``summary()``, not here).
+
+        A stall detector watches for iterations that make no progress at
+        all — no token emitted, no prompt row consumed, no admission, no
+        completion or shedding — while work is actually pending (a future
+        arrival idling the engine is not a stall).  ``stall_limit``
+        consecutive dead iterations raise :class:`StallError` carrying
+        ``health()`` instead of silently burning ``max_iterations``."""
         for r in requests:
             self.submit(r)
         t0 = time.perf_counter()
+        sig = None
+        stalled = 0
         while not self.sched.idle and self.iteration < max_iterations:
             self.step()
+            s = self.sched
+            cur = (
+                self.stats["generated_tokens"],
+                self.stats["prefill_tokens"],
+                s.n_admissions,
+                len(s.finished) + len(s.shed),
+            )
+            idle_by_design = all(x is None for x in s.slots) and all(
+                r.arrival > self.iteration for r in s.waiting
+            )
+            if cur != sig or idle_by_design:
+                sig, stalled = cur, 0
+            else:
+                stalled += 1
+                if stalled >= self.serve.stall_limit:
+                    raise StallError(
+                        f"engine made no progress for {stalled} consecutive"
+                        f" iterations (iteration {self.iteration})",
+                        self.health(),
+                    )
         self.stats["wall_s"] = time.perf_counter() - t0
         if not self.sched.idle:
             raise RuntimeError(f"stream not drained after {max_iterations} iters")
         return {r.rid: list(r.out) for r in self.sched.finished}
+
+    # -------------------------------------------------- health + snapshot
+    def health(self) -> dict:
+        """Instantaneous engine health — cheap enough to poll every step,
+        attached to StallError/LadderExhausted diagnostics."""
+        s = self.sched
+        arrived = sum(1 for r in s.waiting if r.arrival <= self.iteration)
+        return {
+            "iteration": self.iteration,
+            "rung": self.rung,
+            "rung_name": LADDER[self.rung],
+            "healthy_streak": self._healthy,
+            "retries": self.stats["retries"],
+            "transient_faults": self.stats["transient_faults"],
+            "quarantines": self.stats["quarantines"],
+            "shed": self.stats["shed"],
+            "expired": self.stats["expired"],
+            "cancelled": self.stats["cancelled"],
+            "poisoned": self.stats["poisoned"],
+            "pool": {
+                "n_blocks": self.serve.n_blocks,
+                "available": s.alloc.available,
+                "in_use": s.alloc.in_use,
+            },
+            "slots": {
+                "running": len(s.running()),
+                "prefilling": len(s.prefilling()),
+                "free": s.slots.count(None),
+            },
+            "queue": {"arrived": arrived, "future": len(s.waiting) - arrived},
+            "step_ms": s.step_ms,
+            "last_fault": self._last_fault,
+        }
+
+    @staticmethod
+    def _freeze(req: Request) -> dict:
+        return {
+            "rid": req.rid,
+            "prompt": [int(t) for t in req.prompt],
+            "max_new_tokens": int(req.max_new_tokens),
+            "arrival": int(req.arrival),
+            "tenant": req.tenant,
+            "priority": int(req.priority),
+            "slo_ttft_ms": req.slo_ttft_ms,
+            "tag": req.tag,
+            "deadline_ms": req.deadline_ms,
+            "out": [int(t) for t in req.out],
+            "status": req.status,
+            "quarantines": int(req.quarantines),
+        }
+
+    @staticmethod
+    def _thaw(rec: dict) -> Request:
+        req = Request(
+            rid=rec["rid"],
+            prompt=list(rec["prompt"]),
+            max_new_tokens=rec["max_new_tokens"],
+            arrival=rec["arrival"],
+            tenant=rec["tenant"],
+            priority=rec["priority"],
+            slo_ttft_ms=rec["slo_ttft_ms"],
+            tag=rec["tag"],
+            deadline_ms=rec["deadline_ms"],
+        )
+        req.out = list(rec["out"])
+        req.status = rec["status"]
+        req.quarantines = rec["quarantines"]
+        return req
+
+    def snapshot(self) -> dict:
+        """JSON-serializable logical engine state: scheduler queues, request
+        progress and the accounting counters — deliberately NO KV tensors
+        and no allocator layout.  KV pages are a pure function of each
+        request's token prefix (the PR 6 invariant), so ``restore`` on a
+        fresh engine re-prefills every in-flight request's prompt + emitted
+        tokens and the continuation is byte-identical; serialized state
+        stays kilobytes however large the pools are.  Call between steps
+        (the engine never yields mid-step)."""
+        s = self.sched
+        return {
+            "version": 1,
+            "arch": self.cfg.name,
+            "iteration": self.iteration,
+            "serve_plan": self.serve.to_record(),
+            "active": [
+                self._freeze(r) for r in s.slots if r is not None
+            ],
+            "waiting": [self._freeze(r) for r in s.waiting],
+            "finished": [self._freeze(r) for r in s.finished],
+            "shed": [self._freeze(r) for r in s.shed],
+            "stats": {
+                k: v for k, v in self.stats.items() if isinstance(v, (int, float))
+            },
+            "sched_counters": {
+                "n_admissions": s.n_admissions,
+                "n_evictions": s.n_evictions,
+                "n_forks": s.n_forks,
+                "n_prefix_hits": s.n_prefix_hits,
+                "prefix_tokens_saved": s.prefix_tokens_saved,
+            },
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Resume a snapshot on this (fresh, idle) engine.
+
+        Finished/shed requests come back purely as records (accounting
+        continuity); in-flight and queued requests re-enter the waiting
+        queue with their emitted tokens preserved — admission prefills
+        ``prompt + out[:-1]`` and the slot continues decoding from its
+        last token, byte-identically (KV pages are a pure function of the
+        prefix).  Deadline clocks restart at restore time: wall-clock
+        timestamps from the crashed process are meaningless here."""
+        if snap.get("arch") != self.cfg.name:
+            raise ValueError(
+                f"snapshot arch {snap.get('arch')!r} != engine {self.cfg.name!r}"
+            )
+        s = self.sched
+        if not s.idle or s.finished or s.shed:
+            raise RuntimeError("restore() needs a fresh idle engine")
+        self.iteration = int(snap["iteration"])
+        for rec in snap["finished"]:
+            req = self._thaw(rec)
+            req.state = DONE
+            s.finished.append(req)
+        for rec in snap["shed"]:
+            req = self._thaw(rec)
+            req.state = DONE
+            s.shed.append(req)
+        for rec in snap["active"] + snap["waiting"]:
+            req = self._thaw(rec)
+            req.state = WAITING
+            self.submit(req)
+        for k, v in snap.get("stats", {}).items():
+            if k in self.stats:
+                self.stats[k] = v
+        sc = snap.get("sched_counters", {})
+        s.n_admissions = sc.get("n_admissions", 0)
+        s.n_evictions = sc.get("n_evictions", 0)
+        s.n_forks = sc.get("n_forks", 0)
+        s.n_prefix_hits = sc.get("n_prefix_hits", 0)
+        s.prefix_tokens_saved = sc.get("prefix_tokens_saved", 0)
 
     def summary(self) -> dict:
         """Engine accounting.  ``tok_per_s`` counts *emitted output tokens*
@@ -533,8 +931,30 @@ class ServingEngine:
         carry ``n`` so a 1-sample p99 is recognizable as such."""
         d = max(self.stats["steps"], 1)
         fin = self.sched.finished
+        shed = self.sched.shed
         spec_on = self.draft is not None and self.spec_len > 0
         wall = self.stats.get("wall_s") or self.stats["device_s"] or None
+
+        def _dispositions(rs: list) -> dict:
+            out = {"shed": 0, "expired": 0, "cancelled": 0, "poisoned": 0}
+            for r in rs:
+                if r.status in out:
+                    out[r.status] += 1
+            return out
+
+        tenants = {}
+        for t, rs in sorted(_by_tenant(fin + shed).items()):
+            t_fin = [r for r in rs if r.status == "ok"]
+            tenants[t] = {
+                "finished": len(t_fin),
+                "latency_s": _percentiles(
+                    [r.t_done - r.t_admit for r in t_fin if r.t_done and r.t_admit]
+                ),
+                "ttft_s": _percentiles(
+                    [r.t_first - r.t_admit for r in t_fin if r.t_first and r.t_admit]
+                ),
+                **_dispositions(rs),
+            }
         return {
             "iterations": self.iteration,
             "steps": self.stats["steps"],
@@ -567,17 +987,27 @@ class ServingEngine:
             "ttft_s": _percentiles(
                 [r.t_first - r.t_admit for r in fin if r.t_first and r.t_admit]
             ),
-            "tenants": {
-                t: {
-                    "finished": len(rs),
-                    "latency_s": _percentiles(
-                        [r.t_done - r.t_admit for r in rs if r.t_done and r.t_admit]
-                    ),
-                    "ttft_s": _percentiles(
-                        [r.t_first - r.t_admit for r in rs if r.t_first and r.t_admit]
-                    ),
-                }
-                for t, rs in sorted(_by_tenant(fin).items())
+            "tenants": tenants,
+            "requests": {
+                "finished": len(fin),
+                **_dispositions(shed),
+            },
+            "faults": {
+                "rung": self.rung,
+                "rung_name": LADDER[self.rung],
+                "retries": self.stats["retries"],
+                "transient_faults": self.stats["transient_faults"],
+                "rung_escalations": self.stats["rung_escalations"],
+                "rung_recoveries": self.stats["rung_recoveries"],
+                "quarantines": self.stats["quarantines"],
+                "injected_nans": self.stats["injected_nans"],
+                "shed": self.stats["shed"],
+                "expired": self.stats["expired"],
+                "cancelled": self.stats["cancelled"],
+                "poisoned": self.stats["poisoned"],
+                "injector": (
+                    self.injector.summary() if self.injector is not None else None
+                ),
             },
             "prefix": {
                 "enabled": self.sched.index is not None,

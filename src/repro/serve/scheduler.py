@@ -182,6 +182,9 @@ class Request:
       chunk sizing (and, via the plan, slab width / draft depth).
     * ``tag`` — free-form workload-class label for per-class reporting
       (``serve.workload.per_class_report``); never read by the scheduler.
+    * ``deadline_ms`` — wall-clock budget from submit; expiry cancels the
+      request wherever it is (queue or slot) and releases its resources.
+      None inherits the plan's fleet default.
 
     Every field after the marker comment is scheduler-owned runtime state —
     internal, reset on eviction, not part of the construction API.
@@ -196,6 +199,7 @@ class Request:
     priority: int = 0
     slo_ttft_ms: Optional[float] = None
     tag: str = ""
+    deadline_ms: Optional[float] = None
     # -- scheduler-owned state --
     state: str = WAITING
     slot: int = -1
@@ -204,7 +208,17 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     shared: int = 0  # leading blocks held by refcount share (stats only)
     registered: int = 0  # prefix-index high-water mark (full blocks indexed)
+    # -- robustness state --
+    # terminal disposition: "ok" (finished normally) | "shed" (admission
+    # backpressure) | "expired" (deadline) | "cancelled" (caller) |
+    # "poisoned" (quarantine_limit consecutive non-finite steps)
+    status: str = "ok"
+    retry_after_s: Optional[float] = None  # hint attached when shed
+    quarantines: int = 0  # total non-finite steps absorbed (stats)
+    quarantine_streak: int = 0  # consecutive; reset by any progress
+    blocked_since: Optional[int] = None  # iteration admission first starved
     # -- latency bookkeeping (wall clock; summary percentiles) --
+    t_submit: Optional[float] = None  # entered the queue (deadline clock t0)
     t_admit: Optional[float] = None  # first admitted into a slot
     t_first: Optional[float] = None  # first output token sampled
     t_done: Optional[float] = None  # generation complete
@@ -212,6 +226,15 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new_tokens
+
+    @property
+    def prefill_target(self) -> list[int]:
+        """Tokens that must be cache-resident before this slot decodes:
+        the prompt, plus — after a crash-restore replay resumed mid-stream
+        — all but the last already-emitted token (that one re-enters as
+        the decode row).  KV pages are a pure function of the token
+        prefix, so replaying this target rebuilds them byte-exactly."""
+        return (self.prompt + self.out[:-1]) if self.out else self.prompt
 
 
 def _seniority(r: Request) -> tuple:
@@ -236,6 +259,10 @@ class Scheduler:
         self.slots: list[Optional[Request]] = [None] * serve.decode_batch
         self.waiting: list[Request] = []
         self.finished: list[Request] = []
+        # requests retired *without* completing (shed / expired / cancelled /
+        # poisoned) — kept separate so goodput accounting cannot conflate
+        # them with finished streams
+        self.shed: list[Request] = []
         self.n_evictions = 0
         # copy-on-write forks the engine must apply (device page copies)
         # BEFORE its next step: (src block, dst block) pairs, appended at
@@ -261,6 +288,8 @@ class Scheduler:
                 f"request {req.rid}: prompt {len(req.prompt)}"
                 f" + {req.max_new_tokens} new tokens exceeds max_seq {limit}"
             )
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         self.waiting.append(req)
 
     # ----------------------------------------------------------- admission
@@ -283,6 +312,7 @@ class Scheduler:
                 return
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
+                self._mark_blocked(arrived, iteration)
                 return
             load = self._tenant_load()
             req = min(
@@ -290,18 +320,36 @@ class Scheduler:
                 key=lambda r: (-r.priority, load.get(r.tenant, 0), r.arrival, r.rid),
             )
             if not self._admit_one(req, slot):
+                self._mark_blocked(arrived, iteration)
                 return  # pool full: keep order, try next iteration
+            # the queue moved: nobody still waiting is starving *yet*
+            for r in self.waiting:
+                r.blocked_since = None
+
+    def _mark_blocked(self, arrived: list[Request], iteration: int) -> None:
+        """Start (or continue) the starvation clock for arrived waiters the
+        pool/slots cannot take; ``shed_starved`` sheds them once the clock
+        exceeds the plan's admission patience."""
+        for r in arrived:
+            if r.blocked_since is None:
+                r.blocked_since = iteration
 
     def _admit_one(self, req: Request, slot: int) -> bool:
         """Place one request into a slot, sharing whatever prefix is
         resident.  Returns False (no side effects) when the pool cannot
-        host the un-shared blocks."""
-        total = self._blocks_for(len(req.prompt))
+        host the un-shared blocks.
+
+        Admission prefills ``req.prefill_target`` — the prompt for a fresh
+        or evicted request, prompt + emitted-so-far for a crash-restore
+        replay (``out`` is preserved; the replayed KV is byte-identical
+        because pages are a pure function of the token prefix)."""
+        target = req.prefill_target
+        total = self._blocks_for(len(target))
         full: list[int] = []
         partial = None
         p = 0
         if self.index is not None:
-            full, partial, p = self.index.match(req.prompt)
+            full, partial, p = self.index.match(target)
         fresh = self.alloc.alloc(total - len(full))
         if fresh is None:
             return False
@@ -313,9 +361,9 @@ class Scheduler:
             self.n_forks += 1
         blocks = full + fresh
         self.waiting.remove(req)
-        req.state, req.slot, req.blocks, req.pos, req.out = (
-            PREFILL, slot, blocks, p, [],
-        )
+        req.state, req.slot, req.blocks, req.pos = PREFILL, slot, blocks, p
+        req.blocked_since = None
+        req.quarantine_streak = 0
         req.shared = len(full)
         req.registered = len(full)
         self.n_admissions += 1
@@ -352,7 +400,7 @@ class Scheduler:
                 continue
             left_ms = r.slo_ttft_ms - (now - r.t_admit) * 1e3
             steps_left = max(left_ms, 0.0) / max(self.step_ms, 1e-9)
-            if len(r.prompt) - r.pos > 0.5 * W * steps_left:
+            if len(r.prefill_target) - r.pos > 0.5 * W * steps_left:
                 return True
         return False
 
@@ -360,7 +408,7 @@ class Scheduler:
         """SLO-aware prefill chunk sizing: TTFT-targeted requests always
         take the full slab width; SLO-less ones throttle to one block per
         step while an SLO'd prefill is at risk."""
-        rem = len(req.prompt) - req.pos
+        rem = len(req.prefill_target) - req.pos
         if req.slo_ttft_ms is None and pressure:
             return min(rem, width, self.serve.block_size)
         return min(rem, width)
@@ -400,7 +448,7 @@ class Scheduler:
                 kinds[b] = len(row)
             elif req.state == PREFILL:
                 n = self._chunk_for(req, width, pressure)
-                chunk = req.prompt[req.pos : req.pos + n]
+                chunk = req.prefill_target[req.pos : req.pos + n]
                 tokens[b, : len(chunk)] = chunk
                 lens[b] = req.pos
                 kinds[b] = len(chunk)
@@ -412,6 +460,7 @@ class Scheduler:
         kinds: np.ndarray,
         vtok: Optional[np.ndarray] = None,
         drafts: Optional[dict] = None,
+        finite: Optional[np.ndarray] = None,
     ) -> dict:
         """[internal] Consume one unified step's per-slot sampled tokens.
 
@@ -434,14 +483,23 @@ class Scheduler:
         length) are registered in the prefix index here — only accepted
         tokens, so rejected draft rows never leak into a shared prefix.
 
+        ``finite[b]`` (the on-device finiteness scalar, when the engine
+        passes it) gates everything: a non-finite slot is *quarantined* —
+        no token is emitted, no position advances, and the slot simply
+        replays the same rows next iteration (the KV it wrote is a pure
+        function of the token prefix, so the replay is byte-exact).
+        ``quarantine_limit`` consecutive quarantines cancel the request as
+        poisoned instead of replaying forever.
+
         Returns this step's accounting: output tokens actually emitted
-        (``generated``), prompt rows consumed (``prefill``), and the
-        speculation counters (draft rows submitted / accepted, slots that
-        speculated, tokens they emitted)."""
+        (``generated``), prompt rows consumed (``prefill``), quarantine
+        outcomes, and the speculation counters (draft rows submitted /
+        accepted, slots that speculated, tokens they emitted)."""
         now = time.perf_counter()
         c = {
             "generated": 0, "prefill": 0, "draft_rows": 0,
             "accepted_drafts": 0, "spec_slots": 0, "spec_generated": 0,
+            "quarantined": 0, "poisoned": 0,
         }
 
         def finish(b, req):
@@ -450,6 +508,12 @@ class Scheduler:
         for b, req in enumerate(self.slots):
             if req is None or kinds[b] == 0:
                 continue
+            if finite is not None and not bool(finite[b]):
+                c["quarantined"] += 1
+                if self._note_quarantine(req, now):
+                    c["poisoned"] += 1
+                continue
+            req.quarantine_streak = 0
             if req.state == RUNNING:
                 k = int(kinds[b])
                 d = list((drafts or {}).get(req.rid, ()))[: k - 1] if k > 1 else []
@@ -474,19 +538,35 @@ class Scheduler:
                 else:
                     self._register_full_blocks(req, int(self.lens[b]))
             elif req.state == PREFILL:
+                target = req.prefill_target
                 req.pos += int(kinds[b])
                 c["prefill"] += int(kinds[b])
-                if req.pos >= len(req.prompt):
-                    req.out.append(int(sampled[b]))
-                    c["generated"] += 1
-                    req.t_first = now
+                if req.pos >= len(target):
+                    if not req.out:
+                        req.out.append(int(sampled[b]))
+                        c["generated"] += 1
+                        req.t_first = now
+                    # else: crash-restore replay — the sample at the last
+                    # target row is out[-1]'s already-known predecessor
+                    # argmax; the preserved tail re-enters as the decode row
                     req.state = RUNNING
-                    self.lens[b] = len(req.prompt)
+                    self.lens[b] = len(target)
                     if req.done:  # max_new_tokens == 1
                         finish(b, req)
                         continue
                 self._register_full_blocks(req, req.pos)
         return c
+
+    def _note_quarantine(self, req: Request, now: float) -> bool:
+        """Count one quarantined (non-finite) step; cancel the request as
+        poisoned when the streak exhausts the plan's quarantine limit.
+        Returns True if the request was cancelled."""
+        req.quarantines += 1
+        req.quarantine_streak += 1
+        if req.quarantine_streak >= self.serve.quarantine_limit:
+            self.cancel(req, status="poisoned", now=now)
+            return True
+        return False
 
     def _finish(self, req: Request, now: float) -> None:
         """Retire a completed request: release its blocks/slot, record it.
@@ -495,6 +575,72 @@ class Scheduler:
         req.state = DONE
         self._release(req)
         self.finished.append(req)
+
+    # ----------------------------------------------- cancellation / shedding
+    def cancel(
+        self,
+        req: Request,
+        status: str = "cancelled",
+        retry_after: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> None:
+        """Retire a request *without* completing it, wherever it lives —
+        the waiting queue or an active slot.  Blocks and radix references
+        release exactly as on completion; a pending copy-on-write fork
+        targeting a released block is dropped before it can write into a
+        reallocated page."""
+        if req.state == DONE:
+            return
+        if req in self.waiting:
+            self.waiting.remove(req)
+        if req.blocks or req.slot >= 0:
+            mine = set(req.blocks)
+            self.pending_copies = [
+                (s, d) for s, d in self.pending_copies if d not in mine
+            ]
+            self._release(req)
+        req.state = DONE
+        req.status = status
+        req.retry_after_s = retry_after
+        req.t_done = now if now is not None else time.perf_counter()
+        self.shed.append(req)
+
+    def expire_deadlines(self, now: float) -> int:
+        """Cancel every queued or active request whose wall-clock deadline
+        (ms since submit) has passed; returns how many expired."""
+        n = 0
+        candidates = [r for r in self.waiting] + [
+            s for s in self.slots if s is not None
+        ]
+        for r in candidates:
+            if r.deadline_ms is None or r.t_submit is None:
+                continue
+            if (now - r.t_submit) * 1e3 > r.deadline_ms:
+                self.cancel(r, status="expired", now=now)
+                n += 1
+        return n
+
+    def shed_starved(self, iteration: int) -> int:
+        """Admission backpressure: shed arrived waiters that have been
+        admission-blocked for longer than the plan's patience, attaching a
+        retry-after hint, instead of livelocking behind eviction."""
+        n = 0
+        for r in list(self.waiting):
+            if r.arrival > iteration or r.blocked_since is None:
+                continue
+            if iteration - r.blocked_since >= self.serve.admission_patience:
+                self.cancel(r, status="shed", retry_after=self._retry_after())
+                n += 1
+        return n
+
+    def _retry_after(self) -> float:
+        """Seconds until admission plausibly unblocks: the earliest runner
+        completion at the measured step rate, or one patience window when
+        nothing is running (pure pool pressure)."""
+        ms = self.step_ms if self.step_ms is not None else 1.0
+        rem = [r.max_new_tokens - len(r.out) for r in self.running()]
+        steps = min(rem) if rem else self.serve.admission_patience
+        return max(steps, 1) * ms / 1e3
 
     # Back-compat aliases: PR 6 consolidated the public serving surface on
     # ``ServingEngine.submit/run/summary`` — slab packing and growth are
@@ -581,16 +727,28 @@ class Scheduler:
         """[internal] Consume one rolled dispatch: append each slot's span
         of sampled tokens, advance its length, retire exhausted requests and
         register newly-full blocks — the K=1 bookkeeping, span-sized.
-        ``out[b, :steps[b]]`` are slot b's tokens in order."""
+        ``out[b, :steps[b]]`` are slot b's tokens in order; a -1 marks the
+        first non-finite iteration (the rolled loop freezes the slot from
+        there), so a truncated span is a quarantine — the slot keeps its
+        last-good length and replays from it next dispatch."""
         now = time.perf_counter()
-        c = {"generated": 0}
+        c = {"generated": 0, "quarantined": 0, "poisoned": 0}
         for b, req in enumerate(self.slots):
             if req is None or steps[b] == 0:
                 continue
-            emit = [int(t) for t in out[b, : int(steps[b])]]
+            row = out[b, : int(steps[b])]
+            neg = np.flatnonzero(row < 0)
+            emit = [int(t) for t in (row[: neg[0]] if len(neg) else row)]
             self.lens[b] += len(emit)
             req.out.extend(emit)
             c["generated"] += len(emit)
+            if emit:
+                req.quarantine_streak = 0
+            if len(neg):
+                c["quarantined"] += 1
+                if self._note_quarantine(req, now):
+                    c["poisoned"] += 1
+                    continue
             if req.done:
                 self._finish(req, now)
             else:
@@ -682,6 +840,7 @@ class Scheduler:
         re-admission the prefix index may hand them straight back."""
         self._release(req)
         req.state, req.pos, req.out = WAITING, 0, []
+        req.quarantine_streak = 0
         self.waiting.append(req)
         self.n_evictions += 1
 

@@ -131,6 +131,10 @@ class ModelDraft:
             cfg, plan, serve, fused=serve.fused_attention,
             spec_width=1, trace=self.trace_counts, trace_key="draft_step",
         )
+        # the drafter never injects chaos into its own step; drafts are
+        # proposals, so a genuinely non-finite drafter just drafts garbage
+        # the target's verification rejects
+        self._no_poison = jnp.zeros((B,), jnp.float32)
 
     # ----------------------------------------------------------- slot state
     def _slot_for(self, rid: str, active: set) -> Optional[int]:
@@ -218,8 +222,9 @@ class ModelDraft:
                 kinds[b] = len(rows)
             if not feeding:
                 break
-            tok, _, self.pools = self._step(
-                self.params, self.pools, tokens, tables, lens, kinds
+            tok, _, _, self.pools = self._step(
+                self.params, self.pools, tokens, tables, lens, kinds,
+                self._no_poison,
             )
             tok = np.asarray(tok)
             for b, rows in feeding.items():

@@ -1,0 +1,513 @@
+"""Fault-tolerant serving: the chaos harness and the hardened engine.
+
+The robustness contract this file pins down:
+
+* **Chaos parity** — under any seeded :class:`FaultInjector` schedule
+  (transient dispatch faults, NaN-poisoned logits, block-pool pressure,
+  step-time spikes) every request the engine *finishes* is byte-identical
+  to the fault-free ``greedy_generate`` oracle.  Faults change latency and
+  the path taken (retries, ladder rungs, quarantine replays), never tokens.
+* **The degradation ladder** — rolled-K spans -> K=1 mixed step -> eager
+  gather fallback, with bounded in-rung retries; exhaustion raises
+  :class:`LadderExhausted` carrying ``health()``; sustained health climbs
+  back up.  The fallback compiles at most once (``fallback_step`` <= 1).
+* **Lifecycle edges** — submit() validation names the offending field,
+  per-request deadlines expire cleanly, starved waiters are shed with a
+  retry-after hint, a wedged scheduler raises :class:`StallError` instead
+  of burning iterations, and ``summary()`` accounts every disposition
+  (finished / shed / expired / cancelled / poisoned) per tenant.
+* **Crash recovery** — ``snapshot()`` (logical state only, kilobytes, no
+  KV) restored onto a fresh engine re-prefills each in-flight request's
+  ``prompt + out[:-1]`` and continues byte-identically: KV pages are a
+  pure function of the token prefix (the PR 6 invariant).
+
+Fast-lane tests here are host-only (no jit); everything that dispatches
+the device step is marked slow, same split as the differential matrix.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import assert_traces_bounded
+
+from repro.configs import get_config
+from repro.core.plan import derive_plan, derive_serve_plan
+from repro.serve import (
+    FaultInjector,
+    LadderExhausted,
+    Request,
+    ServingEngine,
+    StallError,
+    greedy_generate,
+    make_trace,
+)
+from repro.serve.faults import LADDER
+
+MESH1 = {"data": 1, "model": 1}
+MIX = {"chat": 2, "classify": 2}
+MAX_SEQ = 96
+
+# module-level memo instead of fixtures: the hypothesis stub's runner hides
+# the test signature from pytest, so @given tests cannot request fixtures
+_MEMO: dict = {}
+
+
+def _base():
+    if "base" not in _MEMO:
+        cfg = get_config("smollm-135m").reduced()
+        plan = derive_plan(cfg, MESH1, batch=4, seq_len=16, training=False)
+        from repro.models.params import init_params
+
+        params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+        _MEMO["base"] = (cfg, plan, params)
+    return _MEMO["base"]
+
+
+def _mk_trace(cfg):
+    # fresh Request objects per engine (the scheduler mutates them in
+    # place); same seed -> identical prompts/arrivals/budgets
+    return make_trace(cfg, MIX, tenants=2, system_prompt_len=16, stagger=1,
+                      seed=5, max_tokens=MAX_SEQ)
+
+
+def _oracle():
+    """Fault-free greedy reference for the shared trace (computed once)."""
+    if "oracle" not in _MEMO:
+        cfg, plan, params = _base()
+        oracle = {}
+        for r in _mk_trace(cfg):
+            out = greedy_generate(
+                params, cfg, plan, {"tokens": jnp.asarray(r.prompt)[None]},
+                n_steps=r.max_new_tokens,
+                cache_len=len(r.prompt) + r.max_new_tokens,
+                cache_dtype=jnp.float32,
+            )
+            oracle[r.rid] = [int(t) for t in np.asarray(out)[0]]
+        _MEMO["oracle"] = oracle
+    return _MEMO["oracle"]
+
+
+def _serve(cfg, **kw):
+    n_blocks = kw.pop("n_blocks", None)
+    kw.setdefault("max_seq_len", MAX_SEQ)
+    kw.setdefault("decode_batch", 3)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("kv_dtype", "fp32")
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("retry_backoff_s", 0.0)  # tests never sleep
+    sp = derive_serve_plan(cfg, MESH1, **kw)
+    if n_blocks is not None:
+        sp = dataclasses.replace(sp, n_blocks=n_blocks)
+    return sp
+
+
+def _engine(serve_kw=None, injector=None, draft=None):
+    cfg, plan, params = _base()
+    serve = _serve(cfg, **(serve_kw or {}))
+    return ServingEngine(
+        params, cfg, plan, serve, injector=injector, draft=draft
+    )
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: validation + deterministic replay (host-only, fast)
+# ---------------------------------------------------------------------------
+def test_injector_validates_knobs():
+    with pytest.raises(ValueError, match="transient_burst"):
+        FaultInjector(0, transient_burst=0)
+    with pytest.raises(ValueError, match="nan_rate"):
+        FaultInjector(0, nan_rate=1.5)
+    with pytest.raises(ValueError, match="pressure_rate"):
+        FaultInjector(0, pressure_rate=-0.1)
+
+
+def test_injector_schedule_replays_identically():
+    """Every decision is a pure function of (seed, kind, iteration): a
+    second injector asked out of order and repeatedly gives the same
+    schedule — the property chaos parity rests on."""
+    mk = lambda: FaultInjector(7, nan_rate=0.3, spike_rate=0.2, spike_ms=1.0)
+    a, b = mk(), mk()
+    masks = [a.nan_mask(i, 4) for i in range(40)]
+    spikes = [a.spike_s(i) for i in range(40)]
+    for i in reversed(range(40)):
+        np.testing.assert_array_equal(b.nan_mask(i, 4), masks[i])
+        np.testing.assert_array_equal(b.nan_mask(i, 4), masks[i])  # re-ask
+        assert b.spike_s(i) == spikes[i]
+    assert any(m.any() for m in masks), "seed 7 schedule should poison"
+    assert any(spikes), "seed 7 schedule should spike"
+
+
+def test_nan_in_span_matches_per_iteration_mask():
+    """The rolled span's first-poison offsets are exactly what K separate
+    K=1 dispatches would have drawn — rolled vs mixed see ONE schedule."""
+    inj, ref = FaultInjector(3, nan_rate=0.4), FaultInjector(3, nan_rate=0.4)
+    off = inj.nan_in_span(10, 6, 5)
+    for b in range(5):
+        want = next(
+            (t for t in range(6) if ref.nan_mask(10 + t, 5)[b]), -1
+        )
+        assert off[b] == want
+
+
+def test_injector_horizon_silences_new_faults():
+    inj = FaultInjector(1, transient_rate=1.0, nan_rate=1.0, spike_rate=1.0,
+                        horizon=2)
+    with pytest.raises(Exception):
+        inj.check_dispatch(0)
+    inj.check_dispatch(5)  # past horizon: no new trip
+    assert not inj.nan_mask(5, 3).any()
+    assert inj.spike_s(5) == 0.0
+
+
+def test_transient_burst_spans_attempts():
+    """One scheduled fault fails `burst` consecutive attempts, then clears
+    — burst length vs retry_limit decides in-rung recovery vs escalation."""
+    from repro.serve.faults import TransientDeviceError
+
+    inj = FaultInjector(0, transient_rate=1.0, transient_burst=3, horizon=1)
+    for _ in range(3):
+        with pytest.raises(TransientDeviceError):
+            inj.check_dispatch(0)
+    inj.check_dispatch(0)  # burst spent: the retry goes through
+    assert inj.counts["transient"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle edges (host-only, fast: no device dispatch happens)
+# ---------------------------------------------------------------------------
+def test_submit_validation_names_the_field():
+    eng = _engine()
+    vocab = eng.cfg.vocab_size
+    with pytest.raises(ValueError, match=r"v0.*prompt must not be empty"):
+        eng.submit(Request(rid="v0", prompt=[], max_new_tokens=4, arrival=0))
+    with pytest.raises(ValueError, match=r"v1.*max_new_tokens"):
+        eng.submit(Request(rid="v1", prompt=[1], max_new_tokens=0, arrival=0))
+    with pytest.raises(ValueError, match=r"v2.*max_seq_len"):
+        eng.submit(Request(
+            rid="v2", prompt=[1] * MAX_SEQ, max_new_tokens=4, arrival=0
+        ))
+    with pytest.raises(ValueError, match=r"v3.*outside vocab"):
+        eng.submit(Request(
+            rid="v3", prompt=[1, vocab], max_new_tokens=4, arrival=0
+        ))
+    assert not eng.sched.waiting  # nothing half-queued
+
+
+def test_stall_detector_raises_with_health():
+    """A wedged scheduler (admission never happens, work pending) must
+    raise StallError after stall_limit dead iterations, not burn the whole
+    max_iterations budget; the error carries a health() snapshot."""
+    eng = _engine({"stall_limit": 6})
+    eng.sched.admit = lambda iteration: None  # wedge
+    eng.submit(Request(rid="s0", prompt=[1, 2, 3], max_new_tokens=4, arrival=0))
+    with pytest.raises(StallError) as ei:
+        eng.run()
+    h = ei.value.health
+    assert h["queue"]["arrived"] == 1
+    assert h["slots"]["running"] == 0
+    assert h["rung_name"] in LADDER
+
+
+def test_idle_until_future_arrival_is_not_a_stall():
+    """An empty engine waiting for a future arrival is idle by design —
+    the stall detector must not fire while the clock catches up."""
+    eng = _engine({"stall_limit": 3, "deadline_ms": 0.0})
+    # deadline 0 expires the request the moment it arrives (iteration 20),
+    # so the run needs no device step — but it must *reach* iteration 20
+    # through > stall_limit genuinely idle iterations first
+    eng.submit(Request(rid="f0", prompt=[1, 2], max_new_tokens=2, arrival=20))
+    assert eng.run() == {}
+    assert eng.stats["expired"] == 1
+
+
+def test_deadline_expiry_cancels_cleanly():
+    eng = _engine()
+    eng.submit(Request(
+        rid="d0", prompt=[1, 2, 3], max_new_tokens=4, arrival=0,
+        deadline_ms=0.0,
+    ))
+    assert eng.run() == {}
+    (r,) = eng.sched.shed
+    assert r.rid == "d0" and r.status == "expired"
+    assert eng.stats["expired"] == 1
+    assert eng.sched.alloc.in_use == 0
+
+
+def test_plan_default_deadline_applies_at_submit():
+    eng = _engine({"deadline_ms": 0.0})
+    req = Request(rid="d1", prompt=[1], max_new_tokens=2, arrival=0)
+    eng.submit(req)
+    assert req.deadline_ms == 0.0
+    eng.run()
+    assert req.status == "expired"
+
+
+def test_cancel_api():
+    eng = _engine()
+    eng.submit(Request(rid="c0", prompt=[1, 2], max_new_tokens=3, arrival=5))
+    assert eng.cancel("c0") is True
+    assert eng.cancel("missing") is False
+    (r,) = eng.sched.shed
+    assert r.status == "cancelled"
+    assert eng.stats["cancelled"] == 1
+    assert eng.sched.idle
+
+
+def test_ladder_exhausted_raises_with_health():
+    """A transient burst longer than every rung's retry budget must raise
+    LadderExhausted *before* any device dispatch (the check runs before the
+    jitted call, so donated pools are never consumed by a doomed step)."""
+    inj = FaultInjector(0, transient_rate=1.0, transient_burst=8, horizon=1)
+    # non-rolled engine: ladder floor is the mixed rung, so the budget is
+    # (retry_limit + 1) attempts on mixed + the same on gather = 6 < 8
+    eng = _engine({"rolled_steps": 1, "retry_limit": 2}, injector=inj)
+    eng.submit(Request(rid="x0", prompt=[1, 2, 3], max_new_tokens=4, arrival=0))
+    with pytest.raises(LadderExhausted) as ei:
+        eng.run()
+    assert ei.value.health["rung_name"] == "gather"
+    assert eng.stats["rung_escalations"] == 1
+    assert eng.trace_counts["step"] == 0  # nothing ever dispatched
+
+
+def test_summary_accounts_every_disposition_per_tenant():
+    """summary() splits finished vs shed/expired/cancelled/poisoned both
+    globally and per tenant — goodput accounting can never conflate a shed
+    stream with a completed one (satellite: per-tenant dispositions)."""
+    eng = _engine({
+        "admission_patience": 2, "n_blocks": 1 + 2, "block_size": 4,
+    })
+    # t-shed: needs 3 blocks, pool holds 2 -> admission-starved, then shed
+    eng.submit(Request(
+        rid="x0", prompt=[1] * 9, max_new_tokens=2, arrival=0, tenant="t-shed"
+    ))
+    # t-exp: deadline already passed at the first step
+    eng.submit(Request(
+        rid="x1", prompt=[1, 2], max_new_tokens=2, arrival=0, tenant="t-exp",
+        deadline_ms=0.0,
+    ))
+    # t-can: cancelled by the API before it ever arrives
+    eng.submit(Request(
+        rid="x2", prompt=[1, 2], max_new_tokens=2, arrival=50, tenant="t-can"
+    ))
+    assert eng.cancel("x2")
+    assert eng.run() == {}
+    s = eng.summary()
+    assert s["requests"] == {
+        "finished": 0, "shed": 1, "expired": 1, "cancelled": 1, "poisoned": 0,
+    }
+    assert s["tenants"]["t-shed"]["shed"] == 1
+    assert s["tenants"]["t-exp"]["expired"] == 1
+    assert s["tenants"]["t-can"]["cancelled"] == 1
+    assert all(t["finished"] == 0 for t in s["tenants"].values())
+    shed_req = next(r for r in eng.sched.shed if r.rid == "x0")
+    assert shed_req.retry_after_s is not None and shed_req.retry_after_s > 0
+    assert s["faults"]["shed"] == 1 and s["faults"]["expired"] == 1
+
+
+def test_health_shape():
+    eng = _engine()
+    h = eng.health()
+    for k in ("iteration", "rung", "rung_name", "pool", "slots", "queue",
+              "last_fault", "step_ms"):
+        assert k in h, k
+    assert h["rung_name"] == LADDER[h["rung"]]
+    assert h["pool"]["available"] + h["pool"]["in_use"] == (
+        eng.serve.n_blocks - 1
+    )
+
+
+def test_serve_plan_carries_robustness_knobs():
+    cfg = get_config("smollm-135m").reduced()
+    sp = _serve(
+        cfg, deadline_ms=123.0, retry_limit=5, ladder_recovery=7,
+        admission_patience=9, stall_limit=11, quarantine_limit=4,
+    )
+    rec = sp.to_record()
+    assert rec["deadline_ms"] == 123.0
+    assert rec["retry_limit"] == 5
+    assert rec["retry_backoff_s"] == 0.0
+    assert rec["ladder_recovery"] == 7
+    assert rec["admission_patience"] == 9
+    assert rec["stall_limit"] == 11
+    assert rec["quarantine_limit"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Device-dispatching robustness (slow lane)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_backpressure_sheds_with_retry_after_hint():
+    """Pool sized for one stream: the second waiter starves past the
+    admission patience and is shed with a positive retry-after hint while
+    the first stream finishes untouched."""
+    eng = _engine({
+        "decode_batch": 2, "n_blocks": 1 + 3, "admission_patience": 3,
+        "prefix_sharing": False, "rolled_steps": 1,
+    })
+    a = Request(rid="a", prompt=list(range(1, 17)), max_new_tokens=8, arrival=0)
+    b = Request(rid="b", prompt=list(range(21, 37)), max_new_tokens=8, arrival=1)
+    out = eng.run([a, b])
+    assert list(out) == ["a"] and len(out["a"]) == 8
+    assert b.status == "shed" and b.retry_after_s > 0
+    assert eng.stats["shed"] == 1
+    assert eng.sched.alloc.in_use == 0
+    assert_traces_bounded(eng.trace_counts)
+
+
+# the chaos matrix: each injector spec against the K=1 and rolled-K=4
+# engines; every finished request must match the fault-free oracle and the
+# targeted fault machinery must actually have engaged
+CHAOS_SPECS = {
+    "transient": dict(transient_rate=0.3, transient_burst=2, horizon=20),
+    "nan": dict(nan_rate=0.25, horizon=20),
+    "pressure": dict(pressure_rate=0.4, pressure_frac=0.4, pressure_steps=3,
+                     horizon=20),
+    "combined": dict(transient_rate=0.15, transient_burst=2, nan_rate=0.15,
+                     pressure_rate=0.25, pressure_frac=0.3, pressure_steps=2,
+                     spike_rate=0.2, spike_ms=0.5, horizon=24),
+}
+ENGAGED = {
+    "transient": lambda e, inj: (
+        e.stats["transient_faults"] >= 1 and e.stats["retries"] >= 1
+    ),
+    "nan": lambda e, inj: (
+        e.stats["quarantines"] >= 1 and e.stats["injected_nans"] >= 1
+    ),
+    "pressure": lambda e, inj: inj.counts["squeeze"] >= 1,
+    "combined": lambda e, inj: sum(inj.counts.values()) >= 2,
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("rolled", (1, 4))
+@pytest.mark.parametrize("spec", sorted(CHAOS_SPECS))
+def test_chaos_parity(spec, rolled):
+    cfg, _, _ = _base()
+    inj = FaultInjector(seed=11, **CHAOS_SPECS[spec])
+    eng = _engine({"rolled_steps": rolled, "prefix_sharing": True},
+                  injector=inj)
+    got = eng.run(_mk_trace(cfg))
+    for rid, want in _oracle().items():
+        assert got[rid] == want, f"{spec} K={rolled}: {rid} diverged"
+    assert ENGAGED[spec](eng, inj), (dict(eng.stats), dict(inj.counts))
+    assert_traces_bounded(eng.trace_counts)
+    inj.release(eng.sched.alloc)
+    assert eng.sched.alloc.in_use == 0, "chaos leaked blocks"
+    assert eng.summary()["faults"]["injector"]["injected"] == inj.counts
+
+
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@given(chaos_seed=st.integers(min_value=0, max_value=10_000))
+def test_chaos_parity_property(chaos_seed):
+    """Any drawn injector schedule: finished streams byte-match the oracle,
+    nothing leaks, the no-retrace contract holds (satellite: fuzz)."""
+    cfg, _, _ = _base()
+    rng = np.random.default_rng(chaos_seed)
+    inj = FaultInjector(
+        chaos_seed,
+        transient_rate=float(rng.uniform(0, 0.3)),
+        transient_burst=int(rng.integers(1, 3)),
+        nan_rate=float(rng.uniform(0, 0.25)),
+        pressure_rate=float(rng.uniform(0, 0.3)),
+        pressure_frac=0.3, pressure_steps=2, horizon=24,
+    )
+    eng = _engine({"rolled_steps": 4}, injector=inj)
+    got = eng.run(_mk_trace(cfg))
+    for rid, want in _oracle().items():
+        assert got[rid] == want, f"seed {chaos_seed}: {rid} diverged"
+    assert_traces_bounded(eng.trace_counts)
+    inj.release(eng.sched.alloc)
+    assert eng.sched.alloc.in_use == 0
+
+
+@pytest.mark.slow
+def test_ladder_reaches_gather_and_recovers():
+    """A burst outlasting the mixed rung's retries escalates to the eager
+    gather fallback (compiled exactly once, its own trace key), still emits
+    byte-identical tokens, then climbs back to the floor."""
+    inj = FaultInjector(0, transient_rate=1.0, transient_burst=4, horizon=1)
+    eng = _engine({"rolled_steps": 1, "retry_limit": 2, "ladder_recovery": 4},
+                  injector=inj)
+    cfg, _, _ = _base()
+    got = eng.run(_mk_trace(cfg))
+    for rid, want in _oracle().items():
+        assert got[rid] == want, f"gather fallback diverged on {rid}"
+    assert eng.stats["rung_escalations"] == 1
+    assert eng.trace_counts["fallback_step"] == 1
+    assert eng.stats["rung_recoveries"] >= 1
+    assert eng.rung == 1  # back at the non-rolled floor (mixed)
+    assert_traces_bounded(eng.trace_counts)
+
+
+@pytest.mark.slow
+def test_rolled_ladder_escalates_and_recovers():
+    """On a rolled engine the same burst drops to the K=1 rung, recovery
+    climbs back to rung 0 and rolled spans resume — with parity."""
+    inj = FaultInjector(0, transient_rate=1.0, transient_burst=4, horizon=1)
+    eng = _engine({"rolled_steps": 4, "retry_limit": 2, "ladder_recovery": 2},
+                  injector=inj)
+    cfg, _, _ = _base()
+    got = eng.run(_mk_trace(cfg))
+    for rid, want in _oracle().items():
+        assert got[rid] == want, f"rolled ladder diverged on {rid}"
+    assert eng.stats["rung_escalations"] >= 1
+    assert eng.stats["rung_recoveries"] >= 1
+    assert eng.rung == 0
+    assert eng.stats["rolled_dispatches"] >= 1
+    assert_traces_bounded(eng.trace_counts)
+
+
+@pytest.mark.slow
+def test_snapshot_restore_resumes_byte_identically():
+    """Interrupt mid-stream, snapshot (JSON round-trip), restore onto a
+    fresh engine: the union of work finishes byte-identical to the oracle.
+    The snapshot carries no KV — restore re-prefills prompt + out[:-1] and
+    the pages rebuild exactly (pure function of the token prefix)."""
+    cfg, _, _ = _base()
+    eng = _engine()
+    for r in _mk_trace(cfg):
+        eng.submit(r)
+    while eng.stats["generated_tokens"] < 5 and not eng.sched.idle:
+        eng.step()
+    assert not eng.sched.idle, "interrupted too late to be interesting"
+    snap = json.loads(json.dumps(eng.snapshot()))  # crash-file round trip
+    eng2 = _engine()
+    eng2.restore(snap)
+    got = eng2.run()
+    oracle = _oracle()
+    assert set(got) == set(oracle)
+    for rid, want in oracle.items():
+        assert got[rid] == want, f"restore diverged on {rid}"
+    # a used engine refuses restore; so does a mismatched arch
+    with pytest.raises(RuntimeError):
+        eng2.restore(snap)
+    eng3 = _engine()
+    with pytest.raises(ValueError, match="arch"):
+        eng3.restore(dict(snap, arch="not-this-model"))
+
+
+@pytest.mark.slow
+def test_draft_resyncs_after_quarantine():
+    """Speculation + NaN chaos: quarantined slots make no progress, the
+    drafter's self-healing prefix sync absorbs the replays, and the stream
+    stays byte-identical to plain greedy (PR 5 invariant under faults)."""
+    from repro.serve.speculative import make_draft_source
+
+    cfg, plan, params = _base()
+    serve = _serve(cfg, rolled_steps=1, draft="smollm-135m", spec_len=2)
+    draft = make_draft_source("smollm-135m", cfg, serve, seed=3, reduced=True)
+    inj = FaultInjector(5, nan_rate=0.3, horizon=16)
+    eng = ServingEngine(params, cfg, plan, serve, draft=draft, injector=inj)
+    got = eng.run(_mk_trace(cfg))
+    for rid, want in _oracle().items():
+        assert got[rid] == want, f"spec + chaos diverged on {rid}"
+    assert eng.stats["quarantines"] >= 1
+    assert eng.stats["draft_rows"] > 0
+    assert_traces_bounded(eng.trace_counts)

@@ -240,6 +240,7 @@ def test_serve_args_maps_one_to_one_onto_plan_overrides():
             "--max-seq", "128", "--slab-width", "16", "--pages-per-tile", "2",
             "--no-fused", "--kv-dtype", "int8", "--draft", "ngram",
             "--spec-len", "2", "--no-prefix-sharing", "--slo-ttft-ms", "250",
+            "--deadline-ms", "1500", "--retry-limit", "2", "--stall-limit", "64",
         ]
     )
     a = ServeArgs.from_namespace(ns)
@@ -250,12 +251,15 @@ def test_serve_args_maps_one_to_one_onto_plan_overrides():
         "kv_dtype": "int8", "draft": "ngram", "spec_len": 2,
         "prefix_sharing": False, "slo_ttft_ms": 250.0,
         "typical_prompt_len": 32, "rolled_steps": None,
+        "deadline_ms": 1500.0, "retry_limit": 2, "stall_limit": 64,
     }
     cfg = get_config("smollm-135m")
     sp = derive_serve_plan(cfg, MESH1, TPU_V5E, **ov)
     assert sp.decode_batch == 4 and sp.kv_dtype == "int8"
     assert not sp.prefix_sharing and sp.slo_ttft_ms == 250.0
     assert sp.mixed_slab_width == 16 and not sp.fused_attention
+    assert sp.deadline_ms == 1500.0 and sp.retry_limit == 2
+    assert sp.stall_limit == 64
 
 
 def test_serve_args_old_spellings_and_trace_flags():

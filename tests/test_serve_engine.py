@@ -212,6 +212,7 @@ def test_unified_step_jaxpr_has_no_dense_gather(key):
         jnp.zeros((B, serve.max_blocks_per_seq), jnp.int32),
         jnp.zeros((B,), jnp.int32),
         jnp.ones((B,), jnp.int32),
+        jnp.zeros((B,), jnp.float32),
     )
 
     def jaxpr_of(engine):

@@ -18,10 +18,17 @@ device, no model) and asserts every invariant after every operation:
   request's block list (then trash), and every pre-reserved rolled span
   is fully covered before dispatch.
 
+The chaos variant layers the fault machinery on the same churn: a
+:class:`FaultInjector` squeezing the free list, zero-deadline expiry,
+random cancels and admission shedding — the invariants must hold with the
+injector holding blocks, and every request must end finished or shed.
+
 Strategies come from ``hypothesis`` when installed (CI) or the
 deterministic stub in ``_hypothesis_stub.py`` otherwise; either way the
 sequence is derived from drawn integer seeds, so failures reproduce.
 """
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -29,6 +36,7 @@ from hypothesis import strategies as st
 
 from repro.configs import get_config
 from repro.core.plan import derive_serve_plan
+from repro.serve.faults import FaultInjector
 from repro.serve.scheduler import PREFILL, RUNNING, Request, Scheduler
 
 pytestmark = pytest.mark.slow
@@ -49,13 +57,16 @@ def _serve_plan(n_blocks=None, decode_batch=3, block_size=4):
     return sp
 
 
-def _check_invariants(s: Scheduler) -> None:
+def _check_invariants(s: Scheduler, held=()) -> None:
     alloc, serve = s.alloc, s.serve
     # conservation: free + resident == allocatable pool
     assert alloc.available + alloc.in_use == serve.n_blocks - 1
     # refcount exactness vs the live holders (slot owners are the only
-    # block-holding requests; waiting/finished/evicted hold none)
+    # block-holding requests; waiting/finished/evicted hold none —
+    # plus whatever blocks a chaos injector is squeezing out of the pool)
     holders: dict[int, int] = {}
+    for b in held:
+        holders[b] = holders.get(b, 0) + 1
     for r in s.slots:
         if r is None:
             continue
@@ -224,6 +235,84 @@ def test_allocator_and_index_survive_tiny_pools(seed, sharing):
         _host_step(s, rng)
         _check_invariants(s)
         t += 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_scheduler_invariants_under_chaos_churn(seed):
+    """The random churn with the fault machinery layered on: injector
+    pool squeezes, zero-deadline expiry, random cancels and admission
+    shedding.  The conserved invariants must hold with the injector
+    holding blocks (they count as one extra holder each), every request
+    must terminate as finished *or* shed — never lost — and releasing the
+    squeeze must make the pool whole again."""
+    rng = np.random.default_rng(seed)
+    inj = FaultInjector(
+        int(seed) % 2**31, pressure_rate=0.3, pressure_frac=0.5,
+        pressure_steps=3,
+    )
+    import dataclasses
+
+    sp = dataclasses.replace(
+        _serve_plan(n_blocks=1 + 14), admission_patience=6
+    )
+    s = Scheduler(sp)
+    t, n_submitted = 0, 0
+
+    def tick():
+        inj.pressure(t, s.alloc)
+        s.expire_deadlines(time.perf_counter())
+        s.admit(t)
+        s.shed_starved(t)
+        s.drain_copies()
+        _check_invariants(s, held=inj.held)
+
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.35 and n_submitted < 24:
+            r = _random_request(rng, n_submitted, t)
+            if rng.random() < 0.15:
+                r.deadline_ms = 0.0  # expires the moment it is checked
+            s.submit(r)
+            n_submitted += 1
+        tick()
+        if op < 0.10:
+            live = s._active() + list(s.waiting)
+            if live:
+                s.cancel(live[int(rng.integers(len(live)))])
+                _check_invariants(s, held=inj.held)
+        try:
+            s._grow_for_decode()
+        except RuntimeError:
+            # a squeeze can leave too little pool for a single request's
+            # growth: legal terminal diagnosis, state must stay consistent
+            _check_invariants(s, held=inj.held)
+            return
+        _host_step(s, rng)
+        _check_invariants(s, held=inj.held)
+        t += 1
+    guard = 0
+    while not s.idle and guard < 500:
+        tick()
+        try:
+            s._grow_for_decode()
+        except RuntimeError:
+            _check_invariants(s, held=inj.held)
+            return
+        _host_step(s, rng)
+        _check_invariants(s, held=inj.held)
+        t += 1
+        guard += 1
+    assert s.idle, "chaotic stream failed to drain"
+    # nothing vanished: every submission is accounted finished or shed
+    assert len(s.finished) + len(s.shed) == n_submitted
+    for r in s.shed:
+        assert r.status in ("shed", "expired", "cancelled", "poisoned")
+    inj.release(s.alloc)
+    _check_invariants(s)
+    assert s.alloc.in_use == 0
+    if s.index is not None:
+        assert len(s.index) == 0
 
 
 def test_prefill_then_rolled_spans_preserve_state():
