@@ -1,9 +1,46 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: timing, CSV emission, and the provenance envelope
+every BENCH_*.json artifact carries (:func:`bench_record`)."""
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 
 import jax
+
+# Bump when the envelope's own keys change meaning; per-bench payload
+# schemas evolve independently underneath it.
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_record(bench: str, payload: dict, *, config: dict | None = None,
+                 seed: int | None = None, elapsed_s: float | None = None) -> dict:
+    """Wrap one benchmark's payload in the shared provenance envelope.
+
+    Every BENCH_*.json emitter goes through this so CI artifacts from
+    different lanes/dates are comparable: the envelope pins the schema
+    version, which device actually ran, the seed, and a short hash of the
+    bench's own configuration (two artifacts with equal ``config_hash``
+    measured the same thing).
+    """
+    dev = jax.devices()[0]
+    record = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": bench,
+        "device": getattr(dev, "device_kind", str(dev)),
+        "backend": jax.default_backend(),
+        "seed": seed,
+        "config_hash": (
+            hashlib.sha256(
+                json.dumps(config, sort_keys=True, default=str).encode()
+            ).hexdigest()[:12]
+            if config is not None
+            else None
+        ),
+        "elapsed_s": None if elapsed_s is None else round(elapsed_s, 3),
+    }
+    record.update(payload)
+    return record
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:

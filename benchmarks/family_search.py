@@ -30,7 +30,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.configs import get_config
 from repro.core.hardware import get_hardware
 from repro.core.plan import derive_plan
@@ -87,6 +87,9 @@ def _replay_point(cfg, plan, serve, *, gen=24, seed=7) -> dict:
         "measured_tok_per_s": s["generated_tokens"] / wall,
         "generated_tokens": s["generated_tokens"],
         "wall_s": wall,
+        # drift meter: measured/predicted per-dispatch ratio on THIS point,
+        # from the same roofline that ranked the candidates
+        "calibration": s["calibration"],
     }
 
 
@@ -111,12 +114,14 @@ def replay(max_points: int = 4) -> dict:
     rows = []
     for p in candidates:
         m = _replay_point(cfg, plan, p.plan)
+        drift = (m["calibration"] or {}).get("overall_ratio")
         rows.append(
             {
                 "decode_batch": p.plan.decode_batch,
                 "spec_len": p.plan.spec_len,
                 "predicted_tok_per_s": p.tokens_per_s,
                 "on_frontier": any(q is p for q in result.frontier),
+                "drift_ratio": drift,
                 **m,
             }
         )
@@ -124,6 +129,7 @@ def replay(max_points: int = 4) -> dict:
             f"replay B={p.plan.decode_batch} gamma={p.plan.spec_len}: "
             f"predicted {p.tokens_per_s:.0f}, "
             f"measured {m['measured_tok_per_s']:.1f} tok/s"
+            + (f", drift {drift:.0f}x" if drift else "")
         )
     pred_rank = sorted(
         range(len(rows)), key=lambda i: -rows[i]["predicted_tok_per_s"]
@@ -131,22 +137,53 @@ def replay(max_points: int = 4) -> dict:
     meas_rank = sorted(
         range(len(rows)), key=lambda i: -rows[i]["measured_tok_per_s"]
     )
+    ordering_holds = pred_rank == meas_rank
+    drifts = [r["drift_ratio"] for r in rows if r["drift_ratio"]]
     return {
         "arch": cfg.name,
         "points": rows,
         # predicted ordering vs measured, recorded honestly: the model is a
         # TPU roofline, the measurement a CPU interpreter — disagreement at
         # this scale is informative, not a failure
-        "ordering_holds": pred_rank == meas_rank,
+        "ordering_holds": ordering_holds,
         "top_agrees": bool(rows) and pred_rank[0] == meas_rank[0],
+        # and WHY: the drift meter's per-point measured/predicted ratio,
+        # plus the spread across points — a wide spread means the roofline
+        # misprices candidates *relative to each other*, which is precisely
+        # the failure mode that breaks orderings (a uniform offset wouldn't)
+        "drift": {
+            "per_point_ratio": drifts,
+            "spread": (max(drifts) / min(drifts)) if drifts else None,
+            "explanation": _ordering_explanation(ordering_holds, drifts),
+        },
     }
+
+
+def _ordering_explanation(ordering_holds: bool, drifts: list) -> str:
+    if not drifts:
+        return "no calibrated dispatches; drift unknown"
+    spread = max(drifts) / min(drifts)
+    lo, hi = min(drifts), max(drifts)
+    if ordering_holds:
+        return (
+            f"predicted ordering held; per-point drift {lo:.3g}x-{hi:.3g}x "
+            f"(spread {spread:.2f}x) was uniform enough to preserve ranks"
+        )
+    return (
+        f"predicted ordering broke: per-point drift spans {lo:.3g}x-{hi:.3g}x "
+        f"(spread {spread:.2f}x) — the roofline misprices these candidates "
+        "relative to each other on this backend, so the predicted ranking "
+        "cannot survive replay"
+    )
 
 
 def smoke(out: str = "BENCH_family.json") -> dict:
-    record = {
+    t0 = time.perf_counter()
+    record = bench_record("family_search", {
         "predicted": predicted_frontiers(),
         "replay": replay(),
-    }
+    }, config={"arch": PREDICT_ARCH, "devices": PREDICT_DEVICES}, seed=7,
+        elapsed_s=time.perf_counter() - t0)
     with open(out, "w") as f:
         json.dump(record, f, indent=1, default=str)
     sizes = {
@@ -157,6 +194,7 @@ def smoke(out: str = "BENCH_family.json") -> dict:
         f"replay top_agrees={record['replay']['top_agrees']} "
         f"ordering_holds={record['replay']['ordering_holds']}"
     )
+    print(record["replay"]["drift"]["explanation"])
     return record
 
 

@@ -36,7 +36,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -154,7 +154,11 @@ def chaos_ab(cfg, *, max_seq=128, tenants=2, seed=3) -> dict:
 
 def faults_smoke(arch: str = "smollm-135m", out: str = "BENCH_faults.json") -> dict:
     cfg = get_config(arch)
-    record = {"arch": arch, "chaos_ab": chaos_ab(cfg)}
+    t0 = time.perf_counter()
+    record = bench_record(
+        "faults", {"arch": arch, "chaos_ab": chaos_ab(cfg)},
+        config={"arch": arch}, seed=0, elapsed_s=time.perf_counter() - t0,
+    )
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     ab = record["chaos_ab"]

@@ -37,7 +37,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -171,11 +171,12 @@ def multitenant_smoke(
     arch: str = "smollm-135m", out: str = "BENCH_multitenant.json"
 ) -> dict:
     cfg = get_config(arch)
-    record = {
+    t0 = time.perf_counter()
+    record = bench_record("multitenant", {
         "arch": arch,
         "trace_replay": trace_replay(cfg),
         "one_prompt_scaling": one_prompt_scaling(cfg),
-    }
+    }, config={"arch": arch}, seed=0, elapsed_s=time.perf_counter() - t0)
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     tr = record["trace_replay"]

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.core.hardware import TPU_V5E
 from repro.kernels.paged_attention.ops import paged_attention as fused_attn
 from repro.models.cache import paged_gather
@@ -129,10 +129,11 @@ SWEEP = [
 
 
 def sweep(out: str = "BENCH_paged_attn.json") -> dict:
+    t0 = time.perf_counter()
     cases = [bench_case(*c) for c in SWEEP]
     max_ctx = max(c["context"] for c in cases)
     at_largest = [c for c in cases if c["context"] == max_ctx]
-    record = {
+    record = bench_record("paged_attn", {
         "hardware": TPU_V5E.name + " (cpu interpret timings)",
         "cases": cases,
         "largest_context": max_ctx,
@@ -142,7 +143,7 @@ def sweep(out: str = "BENCH_paged_attn.json") -> dict:
                 for c in at_largest
             )
         ),
-    }
+    }, config={"sweep": SWEEP}, seed=0, elapsed_s=time.perf_counter() - t0)
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     for c in cases:

@@ -11,6 +11,7 @@ def main() -> None:
         faults_bench,
         fig5_batch_sweep,
         multitenant_bench,
+        obs_bench,
         paged_attn_bench,
         serve_sweep,
         spec_decode_bench,
@@ -34,6 +35,7 @@ def main() -> None:
         multitenant_bench,
         faults_bench,
         family_search,
+        obs_bench,
     ):
         try:
             mod.run()

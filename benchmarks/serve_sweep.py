@@ -34,7 +34,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -75,8 +75,9 @@ def _drive(cfg, decode_batch, *, n_requests=8, prompt_len=32, gen=16, stagger=2,
 
 def serving_smoke(arch: str = "smollm-135m", out: str = "BENCH_serve.json") -> dict:
     cfg = get_config(arch)
+    t0 = time.perf_counter()
     s = _drive(cfg, decode_batch=4, n_requests=6, prompt_len=32, gen=12, stagger=2)
-    record = {
+    record = bench_record("serve_sweep", {
         "arch": arch,
         # output tokens only — prompt rows ride in prefill_tokens, so the
         # headline tokens/s can no longer be inflated by prefill traffic
@@ -93,7 +94,8 @@ def serving_smoke(arch: str = "smollm-135m", out: str = "BENCH_serve.json") -> d
         "wall_s": s["wall_s"],
         "serve_plan": s["serve_plan"],
         "spec_smoke": _spec_smoke(cfg),
-    }
+        "prometheus_roundtrip": _prometheus_smoke(cfg),
+    }, config={"arch": arch}, seed=7, elapsed_s=time.perf_counter() - t0)
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {out}: {record['tokens_per_s']:.1f} tok/s "
@@ -128,6 +130,34 @@ def _spec_smoke(cfg) -> dict:
         "draft": serve.draft,
         "acceptance_rate": s["spec"]["acceptance_rate"],
         "tokens_per_spec_step": s["spec"]["tokens_per_spec_step"],
+    }
+
+
+def _prometheus_smoke(cfg) -> dict:
+    """Serving-smoke invariant: the metrics a real engine run populates
+    must survive a Prometheus text-exposition round trip exactly (parse of
+    the rendered text == the registry's own flat samples)."""
+    from repro.obs import Observability, prometheus_roundtrip_ok
+    from repro.serve.scheduler import random_stream
+
+    mesh = {"data": 1, "model": 1}
+    plan = derive_plan(cfg, mesh, TPU_V5E, batch=2, seq_len=16, training=False)
+    serve = derive_serve_plan(
+        cfg, mesh, TPU_V5E, max_seq_len=64, decode_batch=2, prefill_chunk=8,
+        mixed_slab_width=8,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg, plan, dtype=jnp.float32)
+    obs = Observability()
+    engine = ServingEngine(params, cfg, plan, serve, obs=obs)
+    engine.run(random_stream(cfg, 3, 8, 6, stagger=1, seed=5))
+    assert prometheus_roundtrip_ok(obs.metrics), (
+        "Prometheus text exposition did not round-trip the live registry"
+    )
+    text = obs.metrics.to_prometheus()
+    return {
+        "roundtrip_ok": True,
+        "series": len([ln for ln in text.splitlines() if ln and ln[0] != "#"]),
+        "exposition_bytes": len(text),
     }
 
 
@@ -192,13 +222,14 @@ def rolled_sweep(arch: str = "smollm-135m",
                   f"spans={p['rolled']['dispatches']} "
                   f"mean_span={p['rolled']['mean_span']}")
     b1 = [p["tok_per_s"] for p in points if p["batch"] == 1]
-    record = {
+    record = bench_record("rolled_sweep", {
         "arch": cfg.name,
         "points": points,
         "monotone_batch1": all(
             later >= 0.95 * prev for prev, later in zip(b1, b1[1:])
         ),
-    }
+    }, config={"arch": arch, "batches": [1, 4, 16], "ks": [1, 2, 4, 8]},
+        seed=7)
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     print(f"wrote {out}: batch=1 curve {[round(x, 1) for x in b1]} "

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan, derive_serve_plan
@@ -121,17 +121,18 @@ def sweep(arch: str = "smollm-135m", gammas=(1, 2, 4), contexts=(16, 48),
 
 
 def spec_smoke(arch: str = "smollm-135m", out: str = "BENCH_spec.json") -> dict:
+    t0 = time.perf_counter()
     records = sweep(arch)
     best = max(
         (r for r in records if r["tokens_per_spec_step"]),
         key=lambda r: r["tokens_per_spec_step"],
     )
-    record = {
+    record = bench_record("spec_decode", {
         "arch": arch + "-reduced",
         "points": records,
         "best": best,
         "all_parity": all(r["parity"] for r in records),
-    }
+    }, config={"arch": arch}, seed=0, elapsed_s=time.perf_counter() - t0)
     with open(out, "w") as f:
         json.dump(record, f, indent=1)
     print(

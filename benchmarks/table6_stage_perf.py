@@ -18,7 +18,7 @@ import pathlib
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import bench_record, emit, time_fn
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
 from repro.core.plan import derive_plan
@@ -78,6 +78,9 @@ def grad_exchange_report(archs=("bert-base", "vit-base"), out_path="BENCH_dist.j
     from repro.dist.collectives import compressed_psum, wire_bytes
     from repro.models.params import param_count_tree
 
+    import time as _time
+
+    _t0 = _time.perf_counter()
     report = {"benchmark": "grad_exchange_bytes_on_wire", "archs": {}}
     for arch in archs:
         cfg = get_config(arch)
@@ -115,6 +118,10 @@ def grad_exchange_report(archs=("bert-base", "vit-base"), out_path="BENCH_dist.j
     report["int8_exchange_max_rel_err"] = max(errs)
     report["grad_leaves_measured"] = len(errs)
     report["params_measured"] = param_count_tree(params)
+    report = bench_record(
+        "grad_exchange", report, config={"archs": list(archs)}, seed=0,
+        elapsed_s=_time.perf_counter() - _t0,
+    )
     pathlib.Path(out_path).write_text(json.dumps(report, indent=1))
     print(f"wrote {out_path} ({len(report['archs'])} archs)", flush=True)
     return report

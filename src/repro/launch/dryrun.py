@@ -14,13 +14,16 @@ Results go to benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json
 go to benchmarks/results/family/<hardware>__<arch>.json.
 """
 # The dry-run (and ONLY the dry-run) needs 512 placeholder devices; this must
-# run before ANY other import that touches jax.
+# run before ANY other import that touches jax.  --calibrate actually *runs*
+# a serving stream, so it keeps the real device topology instead.
 import os
+import sys
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+if "--calibrate" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 import argparse
 import json
@@ -274,6 +277,12 @@ def main():
              "repro.core.hardware.registered_hardware)",
     )
     ap.add_argument(
+        "--calibrate", action="store_true",
+        help="run a short serving stream on the real backend and print the "
+             "planner drift report: predicted (roofline) vs measured wall "
+             "time per phase (docs/OBSERVABILITY.md §Drift)",
+    )
+    ap.add_argument(
         "--max-seq", type=int, default=2048,
         help="serving context bound for the --family sweep",
     )
@@ -282,6 +291,44 @@ def main():
         help="write an aggregate JSON of all cells run (CI benchmark artifact)",
     )
     a = ap.parse_args()
+
+    if a.calibrate:
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.serve import ServeArgs, run_batched
+
+        arch = a.arch or "smollm-135m"
+        cfg = get_config(arch)
+        ok, reason = serve_feasible(cfg)
+        if not ok:
+            raise SystemExit(f"{arch}: {reason} (pick a serve-feasible --arch)")
+        sargs = ServeArgs(
+            arch=arch, requests=6, prompt_len=16, gen=12, stagger=2,
+            max_seq=96, batch=3, fix_batch=True, prefill_chunk=16,
+            hardware=a.hardware,
+        )
+        summary = run_batched(sargs, cfg, make_host_mesh())
+        cal = summary["calibration"]
+        print()
+        print(f"planner drift calibration ({arch}, roofline priced as {a.hardware}):")
+        for phase, rep in (cal.get("phases") or {}).items():
+            if rep is None:
+                continue
+            print(
+                f"  {phase:8s} n={rep['n']:4d}"
+                f" predicted={rep['predicted_ms_mean']:8.3f}ms"
+                f" measured={rep['measured_ms_mean']:8.3f}ms"
+                f" ratio={rep['ratio']:8.2f}"
+                f" p50={rep['ratio_p50']:8.2f} p90={rep['ratio_p90']:8.2f}"
+            )
+        print(f"  overall ratio: {cal.get('overall_ratio')}")
+        print(f"  {cal.get('note')}")
+        if a.bench_out:
+            pathlib.Path(a.bench_out).write_text(
+                json.dumps({"arch": arch, "hardware": a.hardware,
+                            "calibration": cal}, indent=1, default=str)
+            )
+            print(f"wrote {a.bench_out}")
+        return
 
     if a.family:
         from repro.core.search import family_report

@@ -15,7 +15,12 @@ fallback.
     # prompt, driving a heterogeneous class mix with per-class latency
     # percentiles (prefix sharing makes the shared prompts one prefill):
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --trace chat:4,summarize:2,classify:2 --tenant-mix 2 --max-seq 512
+        --replay-trace chat:4,summarize:2,classify:2 --tenant-mix 2 --max-seq 512
+
+    # observability: Prometheus-format metrics + a Chrome trace_event
+    # export of the whole run (open in https://ui.perfetto.dev):
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        --requests 8 --gen 16 --metrics-out m.prom --trace-out trace.json
 
     # eager whole-batch greedy decode (non-attention archs serve here):
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b-reduced \
@@ -107,8 +112,32 @@ class ServeArgs:
     # docs/PLANNER.md).  Individual plan-override flags are ignored then.
     from_family: Optional[str] = None
     # ---- multi-tenant trace replay ----
-    trace: Optional[str] = None  # workload mix, e.g. "chat:4,classify:2"
+    # ``replay_trace`` is the canonical spelling (PR 10 freed ``--trace``
+    # for execution tracing); ``trace`` remains a deprecation alias and the
+    # two fields are kept mirrored in ``__post_init__`` so old callers and
+    # old flags keep working unchanged.
+    replay_trace: Optional[str] = None  # workload mix, e.g. "chat:4,classify:2"
+    trace: Optional[str] = None  # deprecated alias of replay_trace
     tenant_mix: int = 2  # tenants sharing per-tenant system prompts
+    # ---- observability (repro.obs; docs/OBSERVABILITY.md) ----
+    metrics_out: Optional[str] = None  # metrics dump path (.prom = text format)
+    trace_out: Optional[str] = None  # Chrome trace_event JSON path (Perfetto)
+    trace_buffer: int = 65536  # tracer ring-buffer capacity (events)
+
+    def __post_init__(self):
+        if self.replay_trace is None and self.trace is not None:
+            self.replay_trace = self.trace
+        elif self.trace is None and self.replay_trace is not None:
+            self.trace = self.replay_trace
+        elif (
+            self.trace is not None
+            and self.replay_trace is not None
+            and self.trace != self.replay_trace
+        ):
+            raise ValueError(
+                "--trace (deprecated) and --replay-trace disagree: "
+                f"{self.trace!r} vs {self.replay_trace!r}"
+            )
 
     @classmethod
     def from_namespace(cls, ns: argparse.Namespace) -> "ServeArgs":
@@ -153,11 +182,20 @@ class ServeArgs:
             horizon=self.chaos_horizon,
         )
 
+    def make_observability(self):
+        """The engine's observability bundle: metrics + drift always on,
+        lifecycle tracing only when ``--trace-out`` asks for the export."""
+        from repro.obs import Observability
+
+        return Observability(
+            tracing=self.trace_out is not None, trace_buffer=self.trace_buffer
+        )
+
     def request_stream(self, cfg) -> list:
-        if self.trace:
+        if self.replay_trace:
             return make_trace(
                 cfg,
-                parse_mix(self.trace),
+                parse_mix(self.replay_trace),
                 tenants=self.tenant_mix,
                 stagger=self.stagger,
                 seed=1,
@@ -227,8 +265,10 @@ def run_batched(a: ServeArgs, cfg, mesh) -> dict:
     injector = a.make_injector()
     if injector is not None:
         print(f"chaos injection on: {injector.to_record()}")
+    obs = a.make_observability()
     engine = ServingEngine(
-        params, cfg, plan, serve, shardings=sh, draft=draft, injector=injector
+        params, cfg, plan, serve, shardings=sh, draft=draft,
+        injector=injector, obs=obs, hw=hw,
     )
     if engine.fused != serve.fused_attention:
         print("multi-device mesh: unified step falls back to the gather path "
@@ -239,8 +279,23 @@ def run_batched(a: ServeArgs, cfg, mesh) -> dict:
         print(f"engine health after chaos: {json.dumps(engine.health())}")
     first = next(iter(out))
     print(f"served {len(out)} requests; {first} -> {out[first]}")
-    if a.trace:
+    if a.replay_trace:
         summary["classes"] = per_class_report(engine.sched.finished)
+    if a.trace_out:
+        n = obs.tracer.write(a.trace_out)
+        print(f"wrote {n} trace events to {a.trace_out} "
+              f"(load in Perfetto: https://ui.perfetto.dev)")
+    if a.metrics_out:
+        if a.metrics_out.endswith((".prom", ".txt")):
+            with open(a.metrics_out, "w") as f:
+                f.write(obs.metrics.to_prometheus())
+        else:
+            with open(a.metrics_out, "w") as f:
+                json.dump(obs.metrics.snapshot(), f, indent=1)
+        print(f"wrote metrics to {a.metrics_out}")
+    cal = summary["calibration"]
+    if cal.get("overall_ratio"):
+        print(f"planner calibration: {cal['note']}")
     print(json.dumps(summary, indent=1, default=str))
     return summary
 
@@ -358,13 +413,27 @@ def build_parser() -> argparse.ArgumentParser:
                     help="pick the serving plan off the design-space Pareto "
                          "frontier (core/search.py) instead of deriving one; "
                          "the criterion chooses the frontier point")
-    ap.add_argument("--trace", default=None,
+    ap.add_argument("--replay-trace", default=None, dest="replay_trace",
                     help="multi-tenant trace replay: workload mix spec like "
                          "'chat:4,summarize:2,classify:2' (replaces "
                          "--requests/--prompt-len/--gen)")
+    ap.add_argument("--trace", default=None,
+                    help="(deprecated alias for --replay-trace; --trace-out "
+                         "is the lifecycle-trace export)")
     ap.add_argument("--tenant-mix", type=int, default=2,
                     help="tenants in the trace; each gets a shared system "
                          "prompt its requests all carry")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry after the run: *.prom/"
+                         "*.txt -> Prometheus text exposition, anything "
+                         "else -> JSON snapshot")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the lifecycle + dispatch trace as Chrome "
+                         "trace_event JSON (open in https://ui.perfetto.dev); "
+                         "tracing is enabled only when this is set")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="trace ring-buffer capacity in events; older events "
+                         "drop first (dropped count recorded in the export)")
     return ap
 
 

@@ -20,6 +20,9 @@ The documented surface is deliberately small:
   (:class:`TransientDeviceError`, :class:`StallError`,
   :class:`LadderExhausted`) — the chaos harness and the exceptions the
   hardened engine raises (see ``docs/ROBUSTNESS.md``).
+* :class:`Observability` (re-exported from :mod:`repro.obs`) — the
+  metrics + tracing + drift bundle the engine accepts via
+  ``ServingEngine(..., obs=)`` (see ``docs/OBSERVABILITY.md``).
 
 Everything else (``Scheduler``, ``BlockAllocator``, ``PrefixIndex``,
 ``make_mixed_step``, the slab-packing helpers) is engine internals:
@@ -27,6 +30,7 @@ importable from their modules for tests and extensions, but not part of the
 stable seam — PR 7+ should build on the names in ``__all__``.
 """
 
+from repro.obs import Observability
 from repro.serve.engine import (
     ServingEngine,
     greedy_generate,
@@ -58,6 +62,8 @@ __all__ = [
     "TransientDeviceError",
     "StallError",
     "LadderExhausted",
+    # observability bundle (repro.obs)
+    "Observability",
     # draft sources
     "make_draft_source",
     # streams / workloads

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.hardware import DEFAULT_HARDWARE, HardwareSpec
 from repro.core.plan import ExecutionPlan, ServePlan, serve_feasible
 from repro.models.cache import (
     cache_from_prefill,
@@ -40,8 +41,11 @@ from repro.models.cache import (
     paged_copy_block,
 )
 from repro.models.transformer import forward, logits_fn
+from repro.obs import Observability
+from repro.obs.calibrate import step_time_model
 from repro.serve.faults import (
     LADDER,
+    SALTS,
     FaultInjector,
     LadderExhausted,
     StallError,
@@ -347,12 +351,19 @@ class ServingEngine:
         fused: Optional[bool] = None,
         draft=None,
         injector: Optional[FaultInjector] = None,
+        obs: Optional[Observability] = None,
+        hw: Optional[HardwareSpec] = None,
     ):
         ok, reason = serve_feasible(cfg)
         if not ok:
             raise ValueError(f"{cfg.name} cannot serve continuously: {reason}")
         self.cfg, self.plan, self.serve = cfg, plan, serve
-        self.sched = Scheduler(serve)
+        # observability bundle: metrics + drift meter always on (pure host
+        # arithmetic), lifecycle tracing only when the caller enabled it on
+        # the bundle — emission can never touch shapes or device work
+        self.obs = obs if obs is not None else Observability()
+        self.hw = hw if hw is not None else DEFAULT_HARDWARE
+        self.sched = Scheduler(serve, obs=self.obs)
         self.params = params
         self.pools = init_paged_cache(cfg, plan, serve)
         if shardings is not None:
@@ -362,6 +373,8 @@ class ServingEngine:
         shard = shardings.constrain if shardings is not None else Identity
         self._shard = shard
         self.injector = injector
+        if injector is not None:
+            injector.bind(self.obs)
         if fused is None:
             # GSPMD cannot partition the Pallas call over a multi-device
             # mesh yet (ROADMAP: shard_map decode); those engines fall
@@ -371,7 +384,21 @@ class ServingEngine:
                 shardings is None or shardings.mesh.size == 1
             )
         self.fused = bool(fused)
+        # planner drift meter: freeze the predict_point roofline constants
+        # for this (arch, plan, device, TP degree) so pricing a dispatch is
+        # O(1); every calibrated dispatch records predicted vs measured
+        # (summary()["calibration"], docs/OBSERVABILITY.md §Drift meter)
+        mesh_model = (
+            dict(shardings.mesh.shape).get("model", 1)
+            if shardings is not None
+            else 1
+        )
+        self._cost = step_time_model(
+            cfg, serve, self.hw, mesh_model=mesh_model, fused=self.fused
+        )
         self.draft = draft
+        if draft is not None and hasattr(draft, "bind_obs"):
+            draft.bind_obs(self.obs)
         self.spec_len = serve.spec_len if draft is not None else 0
         if self.spec_len >= serve.mixed_slab_width and serve.mixed_slab_width > 0:
             # plan clamps this already; belt-and-braces for hand-built plans
@@ -426,6 +453,7 @@ class ServingEngine:
         # never climbs above the floor
         self._rung_floor = 0 if self._rolled is not None else 1
         self.rung = self._rung_floor
+        self.obs.m_rung.set(self.rung)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request) -> None:
@@ -528,6 +556,7 @@ class ServingEngine:
         self.rung += 1
         self._healthy = 0
         self.stats["rung_escalations"] += 1
+        self.obs.on_rung("down", self.rung, LADDER[self.rung])
         return True
 
     def _note_healthy(self) -> None:
@@ -536,6 +565,7 @@ class ServingEngine:
             self.rung -= 1
             self._healthy = 0
             self.stats["rung_recoveries"] += 1
+            self.obs.on_rung("up", self.rung, LADDER[self.rung])
 
     def _note_fault(self, kind: str, detail: str) -> None:
         self.stats["transient_faults"] += 1
@@ -570,6 +600,7 @@ class ServingEngine:
                 if attempts > self.serve.retry_limit:
                     return False
                 self.stats["retries"] += 1
+                self.obs.on_retry()
                 self._backoff(attempts)
 
     def _poison_vec(self, kinds: np.ndarray) -> np.ndarray:
@@ -584,6 +615,12 @@ class ServingEngine:
             return self._no_poison
         self.injector.counts["nan"] += n
         self.stats["injected_nans"] += n
+        # NaN injections are emitted here, not by the injector: only the
+        # engine knows how many poisons actually landed on occupied slots
+        self.obs.on_fault(
+            "nan", seed=self.injector.seed, salt=SALTS["nan"],
+            iteration=self.iteration, slots=n,
+        )
         v = np.zeros((self.serve.decode_batch,), np.float32)
         v[mask] = np.nan
         return v
@@ -627,6 +664,20 @@ class ServingEngine:
             tokens, tables, lens, kinds = s._slab_view(
                 self.serve.mixed_slab_width, drafts
             )
+            # slab composition + roofline price, snapshotted pre-dispatch
+            # (``_slab_done`` mutates slot states)
+            ka = np.asarray(kinds)
+            composition = {
+                "idle": int((ka == 0).sum()),
+                "decode": int((ka == 1).sum()),
+                "prefill": len(s.prefilling()),
+                "spec": sum(1 for r in s.running() if r.rid in drafts),
+            }
+            rows = int(ka.sum())
+            phase = "prefill" if composition["prefill"] else "decode"
+            predicted_s = self._cost.predict_s(
+                rows, float(np.asarray(lens).sum()) + rows
+            )
             while not self._retry_transients():
                 if not self._escalate():
                     raise LadderExhausted(
@@ -649,15 +700,29 @@ class ServingEngine:
             sampled = np.asarray(sampled)  # block for an honest step time
             vtok = np.asarray(vtok)
             finite = np.asarray(finite)
-            dt_ms = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            dt_ms = (t1 - t0) * 1e3
             self.stats["device_s"] += dt_ms / 1e3
             self._note_healthy()
-            if self.trace_counts[trace_key] == traces_before:
+            calibrated = self.trace_counts[trace_key] == traces_before
+            if calibrated:
                 # feed SLO chunk sizing a compile-free step-time estimate
                 s.step_ms = (
                     dt_ms if s.step_ms is None else 0.8 * s.step_ms + 0.2 * dt_ms
                 )
-            c = s._slab_done(sampled, kinds, vtok, drafts, finite=finite)
+            self.obs.on_dispatch(
+                trace_key, phase, t0, t1, rows=rows,
+                composition=composition, rung=LADDER[self.rung],
+                predicted_s=predicted_s, calibrated=calibrated,
+            )
+            c = s._slab_done(
+                sampled, kinds, vtok, drafts, finite=finite, span=(t0, t1)
+            )
+            self.obs.on_step_counts(c)
+            self.obs.set_pool(
+                available=s.alloc.available, in_use=s.alloc.in_use,
+                active=len(s._active()), queued=len(s.waiting),
+            )
             self.stats["steps"] += 1
             self.stats["prefill_tokens"] += c["prefill"]
             self.stats["generated_tokens"] += c["generated"]
@@ -699,6 +764,11 @@ class ServingEngine:
             n = int((poison >= 0).sum())
             self.injector.counts["nan"] += n
             self.stats["injected_nans"] += n
+            if n:
+                self.obs.on_fault(
+                    "nan", seed=self.injector.seed, salt=SALTS["nan"],
+                    iteration=self.iteration, slots=n, span_k=int(k),
+                )
         traces_before = self.trace_counts["rolled_step"]
         t0 = time.perf_counter()
         if self.injector is not None:
@@ -712,15 +782,34 @@ class ServingEngine:
             jnp.asarray(poison),
         )
         out = np.asarray(out)  # block for an honest span time
-        dt_ms = (time.perf_counter() - t0) * 1e3
+        t1 = time.perf_counter()
+        dt_ms = (t1 - t0) * 1e3
         self.stats["device_s"] += dt_ms / 1e3
         self._note_healthy()
         adv = int(steps.max())  # device iterations actually executed
-        if self.trace_counts["rolled_step"] == traces_before and adv > 0:
+        calibrated = self.trace_counts["rolled_step"] == traces_before and adv > 0
+        if calibrated:
             # per-iteration estimate feeds the same SLO chunk-sizing EMA
             per = dt_ms / adv
             s.step_ms = per if s.step_ms is None else 0.8 * s.step_ms + 0.2 * per
-        c = s._rolled_done(out, steps)
+        live = int((np.asarray(steps) > 0).sum())
+        self.obs.on_dispatch(
+            "rolled_step", "decode", t0, t1, rows=live,
+            composition={
+                "idle": self.serve.decode_batch - live, "decode": live,
+            },
+            rung=LADDER[self.rung], k=adv,
+            predicted_s=self._cost.predict_s(
+                live, float(np.asarray(s.lens).sum()), k=max(adv, 1)
+            ),
+            calibrated=calibrated,
+        )
+        c = s._rolled_done(out, steps, span=(t0, t1))
+        self.obs.on_step_counts(c)
+        self.obs.set_pool(
+            available=s.alloc.available, in_use=s.alloc.in_use,
+            active=len(s._active()), queued=len(s.waiting),
+        )
         self.stats["steps"] += adv
         self.stats["rolled_dispatches"] += 1
         self.stats["rolled_steps"] += adv
@@ -1024,6 +1113,10 @@ class ServingEngine:
                 "peak_blocks": self.sched.alloc.peak_in_use,
                 "double_frees": self.sched.alloc.double_frees,
             },
+            # planner drift meter (obs/calibrate.py): measured dispatch wall
+            # time vs the predict_point roofline, per phase — the signal
+            # that explains whether modeled orderings survive this backend
+            "calibration": self.obs.drift.report(),
             "spec": {
                 "enabled": spec_on,
                 "spec_len": self.spec_len,

@@ -30,6 +30,11 @@ import numpy as np
 # Degradation-ladder rungs, in escalation order.
 LADDER = ("rolled", "mixed", "gather")
 
+# RNG stream salts, one per fault kind — the (seed, salt, iteration) triple
+# is the whole determinism key, and trace events carry it verbatim so a
+# chaos run is visually replayable from its Chrome trace alone.
+SALTS = {"transient": 1, "nan": 2, "pressure": 3, "spike": 4}
+
 
 class TransientDeviceError(RuntimeError):
     """Simulated (or mapped) transient device failure for one dispatch."""
@@ -99,6 +104,23 @@ class FaultInjector:
         self._tripped: set[int] = set()  # iterations whose transient already drew
         self.held: list[int] = []  # blocks squeezed out of the pool
         self._release_at = -1
+        self.obs = None  # Observability bundle (engine binds its own)
+
+    # -- observability ---------------------------------------------------
+    def bind(self, obs) -> None:
+        """Attach an ``repro.obs.Observability`` bundle: every injection
+        fires a metric + a trace instant tagged (seed, salt, iteration).
+        The engine binds its bundle at construction; NaN poisons are the
+        one kind the *engine* emits instead (only it knows how many landed
+        on occupied slots)."""
+        self.obs = obs
+
+    def _emit(self, kind: str, iteration: int, **extra) -> None:
+        if self.obs is not None:
+            self.obs.on_fault(
+                kind, seed=self.seed, salt=SALTS[kind],
+                iteration=int(iteration), **extra,
+            )
 
     # -- determinism core ------------------------------------------------
     def _rng(self, iteration: int, salt: int) -> np.random.Generator:
@@ -119,6 +141,7 @@ class FaultInjector:
         if self._burst_left > 0:
             self._burst_left -= 1
             self.counts["transient"] += 1
+            self._emit("transient", iteration, burst_left=self._burst_left)
             raise TransientDeviceError(f"injected transient fault @ iter {iteration}")
         if self.transient_rate <= 0 or not self._armed(iteration):
             return
@@ -128,6 +151,7 @@ class FaultInjector:
             self._tripped.add(iteration)
             self._burst_left = self.transient_burst - 1
             self.counts["transient"] += 1
+            self._emit("transient", iteration, burst_left=self._burst_left)
             raise TransientDeviceError(f"injected transient fault @ iter {iteration}")
 
     # -- NaN poison ------------------------------------------------------
@@ -163,6 +187,10 @@ class FaultInjector:
                     self.held = got
                     self._release_at = iteration + self.pressure_steps
                     self.counts["squeeze"] += 1
+                    self._emit(
+                        "pressure", iteration,
+                        blocks_held=len(got), release_at=self._release_at,
+                    )
 
     def release(self, alloc) -> None:
         """Hand back any squeezed blocks (e.g. after the stream drained)."""
@@ -177,6 +205,7 @@ class FaultInjector:
             return 0.0
         if self._rng(iteration, 4).random() < self.spike_rate:
             self.counts["spike"] += 1
+            self._emit("spike", iteration, ms=self.spike_ms)
             return self.spike_ms / 1e3
         return 0.0
 

@@ -246,8 +246,17 @@ def _seniority(r: Request) -> tuple:
 class Scheduler:
     """Owns slots, block tables and the request queues for one engine."""
 
-    def __init__(self, serve: ServePlan):
+    def __init__(self, serve: ServePlan, *, obs=None):
         self.serve = serve
+        # shared with the owning engine (which passes its bundle in); a
+        # bare Scheduler builds its own so lifecycle accounting always has
+        # somewhere to land.  Tracing stays disabled unless the bundle
+        # enables it — every hook is host-side only.
+        if obs is None:
+            from repro.obs import Observability
+
+            obs = Observability()
+        self.obs = obs
         self.alloc = BlockAllocator(serve.n_blocks)
         self.index = (
             PrefixIndex(serve.block_size) if serve.prefix_sharing else None
@@ -290,6 +299,7 @@ class Scheduler:
             )
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
+        self.obs.on_submit(req)
         self.waiting.append(req)
 
     # ----------------------------------------------------------- admission
@@ -370,8 +380,12 @@ class Scheduler:
         if p > 0:
             self.n_prefix_hits += 1
             self.prefix_tokens_saved += p
+        now = time.perf_counter()
         if req.t_admit is None:  # re-admission after eviction keeps t0
-            req.t_admit = time.perf_counter()
+            req.t_admit = now
+        self.obs.on_admit(
+            req, now, prefix_tokens=p, forked=partial is not None
+        )
         self.slots[slot] = req
         self.table[slot] = 0
         self.table[slot, : len(blocks)] = blocks
@@ -461,6 +475,7 @@ class Scheduler:
         vtok: Optional[np.ndarray] = None,
         drafts: Optional[dict] = None,
         finite: Optional[np.ndarray] = None,
+        span: Optional[tuple] = None,
     ) -> dict:
         """[internal] Consume one unified step's per-slot sampled tokens.
 
@@ -494,8 +509,14 @@ class Scheduler:
         Returns this step's accounting: output tokens actually emitted
         (``generated``), prompt rows consumed (``prefill``), quarantine
         outcomes, and the speculation counters (draft rows submitted /
-        accepted, slots that speculated, tokens they emitted)."""
+        accepted, slots that speculated, tokens they emitted).
+
+        ``span`` is the engine's (t0, t1) dispatch window; when given, each
+        busy slot gets a per-request lifecycle span over that window
+        (``prefill-chunk`` / ``decode`` / ``spec-verify``) so request
+        timelines nest under step spans in the Chrome trace."""
         now = time.perf_counter()
+        tr = self.obs.tracer
         c = {
             "generated": 0, "prefill": 0, "draft_rows": 0,
             "accepted_drafts": 0, "spec_slots": 0, "spec_generated": 0,
@@ -528,8 +549,24 @@ class Scheduler:
                     c["accepted_drafts"] += a
                     c["spec_slots"] += 1
                     c["spec_generated"] += len(emit)
+                    if span is not None:
+                        tr.request_span(
+                            "spec-verify", req.rid, span[0], span[1],
+                            {"drafted": len(d), "accepted": a,
+                             "emitted": len(emit)},
+                        )
+                        if a < len(d):
+                            tr.request_instant(
+                                "rollback", req.rid, span[1],
+                                {"rejected": len(d) - a},
+                            )
                 else:
                     emit = [int(sampled[b])]
+                    if span is not None:
+                        tr.request_span(
+                            "decode", req.rid, span[0], span[1],
+                            {"pos": int(self.lens[b])},
+                        )
                 self.lens[b] += len(emit)
                 req.out.extend(emit)
                 c["generated"] += len(emit)
@@ -541,11 +578,17 @@ class Scheduler:
                 target = req.prefill_target
                 req.pos += int(kinds[b])
                 c["prefill"] += int(kinds[b])
+                if span is not None:
+                    tr.request_span(
+                        "prefill-chunk", req.rid, span[0], span[1],
+                        {"rows": int(kinds[b]), "pos": req.pos},
+                    )
                 if req.pos >= len(target):
                     if not req.out:
                         req.out.append(int(sampled[b]))
                         c["generated"] += 1
                         req.t_first = now
+                        tr.request_instant("first-token", req.rid, now)
                     # else: crash-restore replay — the sample at the last
                     # target row is out[-1]'s already-known predecessor
                     # argmax; the preserved tail re-enters as the decode row
@@ -563,6 +606,7 @@ class Scheduler:
         Returns True if the request was cancelled."""
         req.quarantines += 1
         req.quarantine_streak += 1
+        self.obs.on_quarantine(req, now)
         if req.quarantine_streak >= self.serve.quarantine_limit:
             self.cancel(req, status="poisoned", now=now)
             return True
@@ -575,6 +619,7 @@ class Scheduler:
         req.state = DONE
         self._release(req)
         self.finished.append(req)
+        self.obs.on_finish(req, now)
 
     # ----------------------------------------------- cancellation / shedding
     def cancel(
@@ -604,6 +649,7 @@ class Scheduler:
         req.retry_after_s = retry_after
         req.t_done = now if now is not None else time.perf_counter()
         self.shed.append(req)
+        self.obs.on_cancel(req, status, req.t_done)
 
     def expire_deadlines(self, now: float) -> int:
         """Cancel every queued or active request whose wall-clock deadline
@@ -723,7 +769,12 @@ class Scheduler:
             steps[r.slot] = min(k, budgets[r.rid])
         return k, steps
 
-    def _rolled_done(self, out: np.ndarray, steps: np.ndarray) -> dict:
+    def _rolled_done(
+        self,
+        out: np.ndarray,
+        steps: np.ndarray,
+        span: Optional[tuple] = None,
+    ) -> dict:
         """[internal] Consume one rolled dispatch: append each slot's span
         of sampled tokens, advance its length, retire exhausted requests and
         register newly-full blocks — the K=1 bookkeeping, span-sized.
@@ -739,6 +790,11 @@ class Scheduler:
             row = out[b, : int(steps[b])]
             neg = np.flatnonzero(row < 0)
             emit = [int(t) for t in (row[: neg[0]] if len(neg) else row)]
+            if span is not None:
+                self.obs.tracer.request_span(
+                    "decode-span", req.rid, span[0], span[1],
+                    {"k": int(steps[b]), "emitted": len(emit)},
+                )
             self.lens[b] += len(emit)
             req.out.extend(emit)
             c["generated"] += len(emit)
@@ -843,6 +899,7 @@ class Scheduler:
         req.quarantine_streak = 0
         self.waiting.append(req)
         self.n_evictions += 1
+        self.obs.on_evict(req, time.perf_counter())
 
     def _release(self, req: Request) -> None:
         for b in self.alloc.free(req.blocks):

@@ -85,12 +85,23 @@ class NGramDraft:
         self.max_ngram = max_ngram
         self.min_ngram = min_ngram
         self.trace_counts: dict = {}  # no device program at all
+        self.obs = None
+
+    def bind_obs(self, obs) -> None:
+        """Emit per-round draft counters into the engine's metrics registry
+        (the engine binds its bundle at construction)."""
+        self.obs = obs
 
     def propose(self, asks: list[Ask]) -> dict:
-        return {
+        out = {
             rid: prompt_lookup(seq, n, self.max_ngram, self.min_ngram)
             for rid, seq, n in asks
         }
+        if self.obs is not None:
+            self.obs.on_draft_round(
+                self.name, len(asks), sum(len(d) for d in out.values())
+            )
+        return out
 
 
 class ModelDraft:
@@ -127,6 +138,7 @@ class ModelDraft:
         self.toks: list[list[int]] = [[] for _ in range(B)]  # cached tokens
         self.rids: list[Optional[str]] = [None] * B
         self.trace_counts = {"draft_step": 0}
+        self.obs = None
         self._step = make_mixed_step(
             cfg, plan, serve, fused=serve.fused_attention,
             spec_width=1, trace=self.trace_counts, trace_key="draft_step",
@@ -185,6 +197,7 @@ class ModelDraft:
         surface as a shorter prefix and cost nothing but re-feeding."""
         if not asks:
             return {}
+        n_dispatches = 0
         active = {rid for rid, _, _ in asks}
         W = self.serve.mixed_slab_width
         B = self.serve.decode_batch
@@ -226,6 +239,7 @@ class ModelDraft:
                 self.params, self.pools, tokens, tables, lens, kinds,
                 self._no_poison,
             )
+            n_dispatches += 1
             tok = np.asarray(tok)
             for b, rows in feeding.items():
                 pending, drafts, want = state[b]
@@ -239,11 +253,23 @@ class ModelDraft:
                     state[b][2] = len(drafts)  # unverifiable id: stop early
                     continue
                 drafts.append(t)
-        return {
+        out = {
             self.rids[b]: drafts
             for b, (_, drafts, _) in state.items()
             if self.rids[b] is not None
         }
+        if self.obs is not None:
+            self.obs.on_draft_round(
+                self.name, len(asks),
+                sum(len(d) for d in out.values()),
+                device_steps=n_dispatches,
+            )
+        return out
+
+    def bind_obs(self, obs) -> None:
+        """Emit per-round draft counters (asks, drafted tokens, device
+        dispatches) into the engine's metrics registry."""
+        self.obs = obs
 
     def summary(self) -> dict:
         return {

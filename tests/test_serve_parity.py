@@ -26,6 +26,11 @@ from conftest import assert_traces_bounded
 
 from repro.configs import get_config
 from repro.core.plan import derive_plan, derive_serve_plan
+from repro.obs import (
+    Observability,
+    prometheus_roundtrip_ok,
+    validate_chrome_trace,
+)
 from repro.serve import Request, ServingEngine, greedy_generate, make_trace
 from repro.serve.speculative import NGramDraft
 
@@ -85,8 +90,14 @@ def test_differential_trace_replay(world, sharing, gamma, rolled, kv):
         draft="ngram" if gamma else "none", spec_len=gamma,
         rolled_steps=rolled,
     )
+    # the observability axis piggybacks on the matrix: half the rows run
+    # with the full bundle (lifecycle tracing on), half with the default —
+    # byte parity and the trace contract must hold identically in both
+    # modes, or the hooks leaked into the hot path
+    obs = Observability(tracing=True) if sharing else None
     engine = ServingEngine(
-        params, cfg, plan, serve, draft=NGramDraft() if gamma else None
+        params, cfg, plan, serve, draft=NGramDraft() if gamma else None,
+        obs=obs,
     )
     got = engine.run(_fresh_trace(cfg))
     for rid, want in oracle.items():
@@ -105,3 +116,11 @@ def test_differential_trace_replay(world, sharing, gamma, rolled, kv):
         assert engine.rolled_cap == rolled
         assert engine.stats["rolled_dispatches"] >= 1
         assert engine.stats["rolled_steps"] >= engine.stats["rolled_dispatches"]
+    if obs is not None:
+        # the exported Chrome trace must validate (monotone timestamps)
+        # and carry at least one complete request lifecycle
+        events = validate_chrome_trace(obs.tracer.chrome_trace())
+        assert any(
+            e["name"] == "request" and e.get("ph") == "X" for e in events
+        ), "obs-on row exported no complete request lifecycle"
+        assert prometheus_roundtrip_ok(obs.metrics)
